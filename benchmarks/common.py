@@ -1,0 +1,37 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def save_json(subdir: str, name: str, payload: dict):
+    d = os.path.join(EXP_DIR, subdir)
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def time_call(fn, *args, warmup=2, iters=10):
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,79 @@
+"""Fig. 6 analogue: communication-vs-loss trade-off curves per policy.
+
+Reads the table_nn5/table_ev results and renders an ASCII scatter + checks the
+paper's headline claim: at parity RMSE, PSGF-Fed communicates >=25% less than
+PSO-Fed (we assert the Pareto-dominance direction on the synthetic data).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import EXP_DIR, save_json
+
+
+def pareto(rows):
+    """Subset of rows not dominated in (comm, rmse)."""
+    out = []
+    for r in rows:
+        if not any(o["comm_params"] <= r["comm_params"] and o["rmse"] < r["rmse"]
+                   and o is not r for o in rows):
+            out.append(r)
+    return sorted(out, key=lambda r: r["comm_params"])
+
+
+def ascii_scatter(rows, width=60, height=14):
+    xs = [r["comm_params"] for r in rows]
+    ys = [r["rmse"] for r in rows]
+    x0, x1 = min(xs), max(xs)
+    y0, y1 = min(ys), max(ys)
+    grid = [[" "] * width for _ in range(height)]
+    for r in rows:
+        cx = int((r["comm_params"] - x0) / max(x1 - x0, 1e-9) * (width - 1))
+        cy = int((r["rmse"] - y0) / max(y1 - y0, 1e-9) * (height - 1))
+        ch = {"online": "O", "pso": "P", "psgf": "G",
+              "psgf_topk": "T"}.get(r["policy"].split("-")[0], "?")
+        grid[height - 1 - cy][cx] = ch
+    lines = ["rmse"] + ["|" + "".join(row) for row in grid]
+    lines.append("+" + "-" * width + "> comm (O=online P=pso G=psgf)")
+    return "\n".join(lines)
+
+
+def run(which: str = "nn5"):
+    path = os.path.join(EXP_DIR, f"table_{which}", "results.json")
+    if not os.path.exists(path):
+        print(f"fig6: no results for {which}; run benchmarks.table23 first")
+        return None
+    rows = json.load(open(path))["rows"]
+    print(ascii_scatter(rows))
+    front = pareto(rows)
+    print("pareto front:", [(r["policy"], f"{r['comm_params']:.2e}", r["rmse"])
+                            for r in front])
+    # headline claim: a psgf config matches (or beats) the best pso rmse with
+    # less communication
+    pso = [r for r in rows if r["policy"].startswith("pso")]
+    psgf = [r for r in rows if r["policy"].startswith("psgf")]
+    claim = None
+    if pso and psgf:
+        best_pso = min(pso, key=lambda r: r["rmse"])
+        cheaper_parity = [r for r in psgf
+                          if r["rmse"] <= best_pso["rmse"] * 1.02
+                          and r["comm_params"] < best_pso["comm_params"]]
+        claim = {
+            "best_pso": best_pso,
+            "psgf_parity_cheaper": sorted(cheaper_parity,
+                                          key=lambda r: r["comm_params"])[:3],
+            "claim_holds": bool(cheaper_parity),
+            "savings_vs_pso": (1 - min((r["comm_params"] for r in cheaper_parity),
+                                       default=best_pso["comm_params"])
+                               / best_pso["comm_params"]),
+        }
+        print(f"fig6({which}): PSGF parity-with-less-comm claim holds: "
+              f"{claim['claim_holds']} (savings {claim['savings_vs_pso']:.0%})")
+    save_json(f"table_{which}", "fig6", {"pareto": front, "claim": claim})
+    return claim
+
+
+if __name__ == "__main__":
+    run("nn5")
+    run("ev")

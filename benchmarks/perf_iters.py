@@ -1,0 +1,442 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver — the three chosen (arch x shape) pairs
+(selection rationale in EXPERIMENTS.md §Perf):
+
+  A. mistral-large-123b x train_4k   — memory-dominant, worst temp footprint
+  B. qwen2-72b x train_4k MULTI-POD  — collective-bound axis; the pair most
+     representative of the paper's technique (PSGF partial sync across pods)
+  C. qwen2-72b x long_500k decode    — worst useful-FLOPs ratio (batch=1
+     duplicates matmuls across the 16-way data axis)
+
+Each iteration records: hypothesis -> change -> before -> after -> verdict.
+Results -> experiments/perf/<pair>.json; run with --pair A|B|C|all.
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as Pp
+
+from repro.common import hw
+from repro.configs import get_config
+from repro.launch import hlo_analysis
+from repro.launch.api import ModelApi, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, shape_variant
+from repro.launch.steps import (
+    build_serve_step, build_train_step, make_optimizer,
+    sharded_serve_inputs, sharded_train_inputs, param_shardings, opt_shardings,
+)
+from repro.optim import Adam, cosine_decay
+from repro.sharding.rules import make_rules
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+
+
+def measure_train(cfg, shape_name, mesh, optimizer=None, pod_size=None):
+    shape = SHAPES[shape_name]
+    cfg = shape_variant(cfg, shape)
+    with mesh:
+        fn, api, rules, optimizer = build_train_step(cfg, mesh, optimizer)
+        params, opt, batch = sharded_train_inputs(cfg, shape, rules, optimizer)
+        compiled = fn.lower(params, opt, batch).compile()
+    return _stats(compiled, pod_size=pod_size)
+
+
+def measure_serve(cfg, shape_name, mesh, rule_overrides=None, pod_size=None):
+    shape = SHAPES[shape_name]
+    cfg = shape_variant(cfg, shape)
+    with mesh:
+        fn, api, rules = build_serve_step(cfg, mesh, rule_overrides=rule_overrides)
+        params, rest = sharded_serve_inputs(cfg, shape, rules)
+        compiled = fn.lower(params, rest["cache"], rest["token"], rest["pos"]).compile()
+    return _stats(compiled, pod_size=pod_size)
+
+
+def _stats(compiled, pod_size=None):
+    mem = hlo_analysis.memory_summary(compiled)
+    cost = hlo_analysis.cost_summary(compiled)
+    coll = hlo_analysis.collective_bytes(compiled.as_text(), pod_size=pod_size)
+    return {
+        "temp_gb": mem.get("temp_size_in_bytes", 0) / 1e9,
+        "args_gb": mem.get("argument_size_in_bytes", 0) / 1e9,
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes_accessed", 0.0),
+        "coll_bytes": coll.get("total", 0.0),
+        "cross_pod_bytes": coll.get("cross_pod", 0.0),
+        "memory_term_s": cost.get("bytes_accessed", 0.0) / hw.HBM_BW,
+        "compute_term_s": cost.get("flops", 0.0) / hw.PEAK_FLOPS_BF16,
+        "coll_term_s": coll.get("total", 0.0) / hw.ICI_BW,
+    }
+
+
+def _record(pair, iters):
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{pair}.json"), "w") as f:
+        json.dump(iters, f, indent=1, default=float)
+    for it in iters:
+        print(f"[{pair}] {it['name']}: {it['verdict']} "
+              f"({it.get('metric')}: {it.get('before'):.4g} -> {it.get('after'):.4g})",
+              flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Pair A: mistral-large-123b x train_4k (memory / temp footprint)
+# ---------------------------------------------------------------------------
+
+
+def pair_a():
+    mesh = make_production_mesh()
+    base_cfg = get_config("mistral-large-123b")
+    iters = []
+
+    # A1: inner-scan remat in chunked attention (custom-vjp off to isolate)
+    cfg_off = dataclasses.replace(base_cfg, attn_remat_inner=False,
+                                  attn_custom_vjp=False)
+    before = measure_train(cfg_off, "train_4k", mesh)
+    cfg_on = dataclasses.replace(base_cfg, attn_remat_inner=True,
+                                 attn_custom_vjp=False)
+    after = measure_train(cfg_on, "train_4k", mesh)
+    iters.append({
+        "name": "A1-attn-inner-remat",
+        "hypothesis": "backward residuals of the kv-block scan (bq x bk prob "
+                      "tiles x nq x nk steps per layer) dominate temp memory; "
+                      "napkin: per layer ~ B*H*Sq*hd*4B*(S/bk) saved tiles "
+                      "~= O(100) GB/device at S=4096 -> rematting the inner "
+                      "step should cut temp by >2x at ~30% attention recompute",
+        "change": "jax.checkpoint around the kv-block step (cfg.attn_remat_inner)",
+        "metric": "temp_gb",
+        "before": before["temp_gb"], "after": after["temp_gb"],
+        "before_full": before, "after_full": after,
+        "verdict": "confirmed" if after["temp_gb"] < 0.6 * before["temp_gb"]
+                   else "refuted",
+    })
+
+    # A2: optimizer moment dtype f32 -> bf16
+    opt32 = Adam(lr=cosine_decay(3e-4, 10000), moment_dtype="float32")
+    b2 = measure_train(cfg_on, "train_4k", mesh, opt32)
+    opt16 = Adam(lr=cosine_decay(3e-4, 10000), moment_dtype="bfloat16")
+    a2 = measure_train(cfg_on, "train_4k", mesh, opt16)
+    iters.append({
+        "name": "A2-bf16-moments",
+        "hypothesis": "Adam m+v at f32 = 8 B/param = 3.8 GB/device for 123 B "
+                      "params over 256 chips; bf16 moments halve that "
+                      "(-1.9 GB/device args) at negligible quality cost",
+        "change": "Adam(moment_dtype='bfloat16')",
+        "metric": "args_gb",
+        "before": b2["args_gb"], "after": a2["args_gb"],
+        "before_full": b2, "after_full": a2,
+        "verdict": "confirmed" if a2["args_gb"] < b2["args_gb"] - 1.0 else "refuted",
+    })
+
+    # A3: attention block size 512 -> 1024 (fewer online-softmax corrections)
+    import repro.models.layers as L
+    b3 = a2  # current best
+    old_block = 512
+    try:
+        L_orig = (512, 512)
+        # temporarily patch default block sizes via partial config: block sizes
+        # are function defaults; emulate by wrapping chunked_attend
+        orig = L.chunked_attend
+        def bigger(q, k, v, qp, kp, causal=True, window=None, block_q=512,
+                   block_k=512, remat_inner=True):
+            return orig(q, k, v, qp, kp, causal=causal, window=window,
+                        block_q=1024, block_k=1024, remat_inner=remat_inner)
+        L.chunked_attend = bigger
+        a3 = measure_train(cfg_on, "train_4k", mesh, opt16)
+    finally:
+        L.chunked_attend = orig
+    iters.append({
+        "name": "A3-block-1024",
+        "hypothesis": "2x larger flash blocks quarter the number of "
+                      "correction multiplies and halve scan trip counts; "
+                      "bytes accessed should drop a few %, temp grows ~4x "
+                      "per-tile (1 MB -> 4 MB, still << VMEM)",
+        "change": "chunked_attend block_q=block_k=1024",
+        "metric": "bytes",
+        "before": b3["bytes"], "after": a3["bytes"],
+        "before_full": b3, "after_full": a3,
+        "verdict": "confirmed" if a3["bytes"] < b3["bytes"] else "refuted",
+    })
+
+    # A4: custom-VJP flash attention (residuals = q,k,v,out,lse only)
+    cfg_vjp = dataclasses.replace(base_cfg, attn_custom_vjp=True)
+    a4 = measure_train(cfg_vjp, "train_4k", mesh, opt16)
+    iters.append({
+        "name": "A4-flash-custom-vjp",
+        "hypothesis": "after A1 the remaining ~430 GB temp might be kv-scan "
+                      "CARRY residuals inside the rematted blocks; a custom "
+                      "VJP saves only (q,k,v,out,lse) and recomputes p-tiles "
+                      "blockwise -> predict temp drops well below 430 GB",
+        "change": "flash_mha custom_vjp (cfg.attn_custom_vjp=True, now the "
+                  "default for all archs)",
+        "metric": "temp_gb",
+        "before": a2["temp_gb"], "after": a4["temp_gb"],
+        "before_full": a2, "after_full": a4,
+        "verdict": "confirmed" if a4["temp_gb"] < 0.7 * a2["temp_gb"] else "refuted",
+    })
+
+    # A5: the temp did NOT move with A4 => the live set is the per-layer remat
+    # carries (B,S,d bf16 = 1.6 GB/device x 88 layers saved across the whole
+    # backward), not attention internals. Nested (sqrt-depth) remat keeps only
+    # L/g group carries live.
+    cfg_a5 = dataclasses.replace(base_cfg, attn_custom_vjp=True, remat_group=8)
+    a5 = measure_train(cfg_a5, "train_4k", mesh, opt16)
+    iters.append({
+        "name": "A5-sqrt-depth-remat",
+        "hypothesis": "A4's null result localizes the ~430 GB to the scan-"
+                      "over-layers remat carries: 88 x (16,4096,12288) "
+                      "activations (~141 GB bf16 + f32 copies). Grouping "
+                      "layers 8-per-checkpoint keeps 11 group carries + 8 "
+                      "transient layer carries live: predict temp ~ "
+                      "(11+8)/88 of the carry component, i.e. a >2x cut, for "
+                      "one extra forward recompute of each group",
+        "change": "cfg.remat_group=8 (2-level nested jax.checkpoint)",
+        "metric": "temp_gb",
+        "before": a4["temp_gb"], "after": a5["temp_gb"],
+        "before_full": a4, "after_full": a5,
+        "verdict": "confirmed" if a5["temp_gb"] < 0.6 * a4["temp_gb"] else "refuted",
+    })
+    _record("A_mistral_train4k", iters)
+
+
+# ---------------------------------------------------------------------------
+# Pair B: qwen2-72b x train_4k multi-pod (collectives; the paper's technique)
+# ---------------------------------------------------------------------------
+
+
+def _lower_psgf_local_step(cfg, mesh, n_pods=2, extra_overrides=None,
+                           pod_size=None):
+    """Per-pod local train step: vmapped over the pod-leading axis; grads
+    all-reduce only within a pod (data axis) — no 'pod' collectives."""
+    api = ModelApi(cfg)
+    optimizer = make_optimizer(cfg)
+    overrides = {"batch": ("data",)}
+    if extra_overrides:
+        overrides.update(extra_overrides)
+    rules = make_rules(mesh, "train", overrides=overrides)
+    p_sh = param_shardings(api, rules)
+
+    def prepend_pod(sh):
+        return NamedSharding(mesh, Pp(*(("pod",) + tuple(sh.spec))))
+
+    p_sh_pod = jax.tree_util.tree_map(prepend_pod, p_sh)
+    abs_p = api.abstract_params()
+    params = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype, sharding=sh),
+        abs_p, p_sh_pod)
+    o_abs = jax.eval_shape(lambda p: optimizer.init(p), abs_p)
+    o_sh = opt_shardings(api, rules, p_sh)
+    o_sh_pod = {"m": jax.tree_util.tree_map(prepend_pod, o_sh["m"]),
+                "v": jax.tree_util.tree_map(prepend_pod, o_sh["v"]),
+                "t": NamedSharding(mesh, Pp("pod"))}
+    opt = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype, sharding=sh),
+        o_abs, o_sh_pod)
+    shape = SHAPES["train_4k"]
+    B = shape.global_batch
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((n_pods, B // n_pods, shape.seq_len), jnp.int32,
+                                       sharding=NamedSharding(mesh, Pp("pod", "data"))),
+        "labels": jax.ShapeDtypeStruct((n_pods, B // n_pods, shape.seq_len), jnp.int32,
+                                       sharding=NamedSharding(mesh, Pp("pod", "data"))),
+    }
+
+    def one_pod(p, o, b):
+        (loss, m), g = jax.value_and_grad(api.loss_fn, has_aux=True)(p, b)
+        p, o = optimizer.update(p, g, o)
+        return p, o, loss
+
+    fn = jax.jit(jax.vmap(one_pod))
+    with mesh:
+        compiled = fn.lower(params, opt, batch).compile()
+    return _stats(compiled, pod_size=pod_size)
+
+
+def _lower_psgf_sync(cfg, mesh, share_ratio, n_pods=2, pod_size=None,
+                     shard_payload=False):
+    """Lower one PSGF sync. ``shard_payload=True`` (§Perf B3) keeps every
+    leaf FSDP-sharded across (data, model) during the sync, so the pod-axis
+    reduction moves each device's 1/256 shard instead of the whole tensor."""
+    from repro.core import psgf_dp as P
+
+    api = ModelApi(cfg)
+    abs_p = api.abstract_params(jnp.bfloat16)
+    rng = np.random.default_rng(0)
+    share = P.sample_static_gates(rng, abs_p, share_ratio)
+    fwd = P.sample_static_gates(rng, abs_p, 0.2)
+    sel = (True, False)
+    if shard_payload:
+        rules = make_rules(mesh, "train", overrides={"batch": ("data",)})
+        p_sh = param_shardings(api, rules)
+        local = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(
+                (n_pods,) + s.shape, s.dtype,
+                sharding=NamedSharding(mesh, Pp(*(("pod",) + tuple(sh.spec))))),
+            abs_p, p_sh)
+        glob = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            abs_p, p_sh)
+    else:
+        local = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, Pp("pod"))),
+            abs_p)
+        glob = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, Pp())),
+            abs_p)
+
+    def sync(l, g):
+        return P.psgf_sync_static(l, g, share, fwd, sel)
+
+    with mesh:
+        compiled = jax.jit(sync).lower(local, glob).compile()
+    return _stats(compiled, pod_size=pod_size)
+
+
+def pair_b():
+    """Metric: CROSS-POD collective bytes per step (replica groups spanning
+    pod boundaries). Per-device ring bytes are group-size-invariant, so the
+    plain total cannot see the pod-axis win — an earlier iteration of this
+    experiment (kept in git history / EXPERIMENTS.md) was refuted for exactly
+    that reason and motivated the replica-group classifier."""
+    mesh = make_production_mesh(multi_pod=True)
+    cfg = get_config("qwen2-72b")
+    POD = 256
+    iters = []
+
+    # B0 baseline: synchronous data parallel across pods
+    before = measure_train(cfg, "train_4k", mesh, pod_size=POD)
+    # B1: PSGF-DP — local steps + partial sync every H steps
+    local = _lower_psgf_local_step(cfg, mesh, pod_size=POD)
+    H, r = 8, 0.3
+    sync = _lower_psgf_sync(cfg, mesh, r, pod_size=POD)
+    eff1 = local["cross_pod_bytes"] + sync["cross_pod_bytes"] / H
+    iters.append({
+        "name": "B1-psgf-dp-H8-r30",
+        "hypothesis": "baseline DP's grad all-reduce + FSDP gathers span the "
+                      "pod boundary every step; PSGF-DP confines the local "
+                      "step to in-pod groups (cross-pod bytes ~ 0) and pays "
+                      "share_ratio*2*params of pod traffic every H steps: "
+                      "predict cross-pod bytes/step drops to ~r/H*2*params "
+                      "~ 1e10, >5x below baseline",
+        "change": "vmap-over-pod local step + psgf_sync_static(0.3) / 8 steps",
+        "metric": "cross_pod_bytes_per_step",
+        "before": before["cross_pod_bytes"], "after": eff1,
+        "before_full": before, "after_full": {"local": local, "sync": sync},
+        "verdict": "confirmed" if eff1 < 0.5 * before["cross_pod_bytes"] else "refuted",
+    })
+
+    # B2: push the schedule (H=16, r=0.2)
+    H2, r2 = 16, 0.2
+    sync2 = _lower_psgf_sync(cfg, mesh, r2, pod_size=POD)
+    eff2 = local["cross_pod_bytes"] + sync2["cross_pod_bytes"] / H2
+    iters.append({
+        "name": "B2-psgf-dp-H16-r20",
+        "hypothesis": "halving share ratio and doubling the interval cuts the "
+                      "amortized cross-pod sync term ~3x more; paper Table "
+                      "III shows RMSE holds at 20-30% sharing",
+        "change": "share_ratio 0.3->0.2, sync_interval 8->16",
+        "metric": "cross_pod_bytes_per_step",
+        "before": eff1, "after": eff2,
+        "before_full": {"local": local, "sync": sync},
+        "after_full": {"local": local, "sync": sync2},
+        "verdict": "confirmed" if eff2 < eff1 else "refuted",
+    })
+    # B3: shard the sync payload. B1/B2 were REFUTED because baseline FSDP
+    # already syncs only each device's 1/256 parameter shard across pods
+    # (~0.7 GB/step) while our sync moved whole replicated tensors. The
+    # correct datacenter mapping of the paper's eq. 4-6 keeps the payload
+    # FSDP-sharded: the pod-axis mean then moves shards, not tensors.
+    sync3 = _lower_psgf_sync(cfg, mesh, r2, pod_size=POD, shard_payload=True)
+    eff3 = local["cross_pod_bytes"] + sync3["cross_pod_bytes"] / H2
+    iters.append({
+        "name": "B3-fsdp-sharded-sync-payload",
+        "hypothesis": "baseline cross-pod bytes ~ 2*params_bytes/256/step "
+                      "because FSDP grads sync as shards; PSGF must compare "
+                      "shard-to-shard: sharded payload sync moves "
+                      "r*2*params_bytes/256 per sync = ~0.2*2*144e9/256 "
+                      "~ 0.2 GB per sync / 16 steps ~ 0.01 GB/step + ~0 "
+                      "local-step pod traffic -> predict >10x below baseline",
+        "change": "psgf_sync_static over FSDP-sharded local/global trees "
+                  "(leading pod dim + (data,model) shard specs)",
+        "metric": "cross_pod_bytes_per_step",
+        "before": eff2, "after": eff3,
+        "before_full": {"local": local, "sync": sync2},
+        "after_full": {"local": local, "sync": sync3},
+        "verdict": "confirmed" if eff3 < 0.5 * eff2 else "refuted",
+    })
+    iters.append({
+        "name": "B-summary-vs-baseline",
+        "hypothesis": "net PSGF-DP (best schedule: H=16, r=0.2, sharded "
+                      "payload) vs synchronous DP, cross-pod bytes per step",
+        "change": "B3 configuration vs B0 baseline",
+        "metric": "cross_pod_bytes_per_step",
+        "before": before["cross_pod_bytes"], "after": eff3,
+        "verdict": "confirmed" if eff3 < before["cross_pod_bytes"] else "refuted",
+    })
+    _record("B_qwen72b_train4k_multipod", iters)
+
+
+# ---------------------------------------------------------------------------
+# Pair C: qwen2-72b x long_500k (batch=1 decode duplication)
+# ---------------------------------------------------------------------------
+
+
+def pair_c():
+    mesh = make_production_mesh()
+    cfg = get_config("qwen2-72b")
+    iters = []
+    before = measure_serve(cfg, "long_500k", mesh)
+    after = measure_serve(cfg, "long_500k", mesh, rule_overrides={"embed": "data"})
+    iters.append({
+        "name": "C1-serve-2d-weight-sharding",
+        "hypothesis": "with batch=1 the 16-way data axis duplicates every "
+                      "matmul (weights replicated over data => each data row "
+                      "computes identical FFN work); sharding the embed "
+                      "(contracting) dim over data splits the matmuls 16-way: "
+                      "predicted per-device flops and weight bytes drop ~16x "
+                      "for ~2*d_model*4B/layer of extra all-reduce traffic "
+                      "(tiny at B=1)",
+        "change": "serve rules override embed->data (2-D weight sharding)",
+        "metric": "flops",
+        "before": before["flops"], "after": after["flops"],
+        "before_full": before, "after_full": after,
+        "verdict": "confirmed" if after["flops"] < 0.5 * before["flops"] else "refuted",
+    })
+
+    # C2: does the same help the bytes term (weights are the decode traffic)?
+    iters.append({
+        "name": "C2-serve-2d-bytes",
+        "hypothesis": "decode is weight-bandwidth-bound: per-device weight "
+                      "bytes should also drop ~16x, moving the memory "
+                      "roofline term proportionally",
+        "change": "same change as C1, bytes metric",
+        "metric": "bytes",
+        "before": before["bytes"], "after": after["bytes"],
+        "before_full": before, "after_full": after,
+        "verdict": "confirmed" if after["bytes"] < 0.5 * before["bytes"] else "refuted",
+    })
+    _record("C_qwen72b_long500k", iters)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all", choices=["A", "B", "C", "all"])
+    args = ap.parse_args()
+    if args.pair in ("A", "all"):
+        pair_a()
+    if args.pair in ("B", "all"):
+        pair_b()
+    if args.pair in ("C", "all"):
+        pair_c()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""PSGF-DP collective-byte benchmark (beyond-paper deliverable).
+
+Lowers the cross-pod sync step on a (2, 2, 2) ("pod","data","model") mesh for
+the qwen2-1.5b parameter tree and counts collective bytes in the compiled
+HLO, comparing:
+  * full_sync  — plain all-reduce of every leaf (baseline data parallel),
+  * psgf_sync_static at share_ratio r in {0.5, 0.3, 0.2}, forward 0.2.
+
+This is the paper's Table II/III trade-off re-expressed as bytes on the pod
+interconnect: HLO collective bytes must scale ~r. Results ->
+experiments/psgf_dp/comm.json.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import psgf_dp as P
+from repro.launch import hlo_analysis
+from repro.launch.api import ModelApi
+from benchmarks.common import save_json
+
+
+def lower_and_count(fn, *args):
+    lowered = jax.jit(fn).lower(*args)
+    compiled = lowered.compile()
+    return hlo_analysis.collective_bytes(compiled.as_text())
+
+
+def run():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = get_config("qwen2-1.5b")
+    api = ModelApi(cfg)
+    from jax.sharding import NamedSharding, PartitionSpec as Pp
+
+    abs_params = api.abstract_params(jnp.bfloat16)
+    n_pods = 2
+    local = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype,
+                                       sharding=NamedSharding(mesh, Pp("pod"))),
+        abs_params)
+    glob = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                       sharding=NamedSharding(mesh, Pp())),
+        abs_params)
+
+    results = {}
+    with mesh:
+        coll = lower_and_count(lambda l: P.full_sync(l, n_pods), local)
+        results["full_sync"] = coll
+        print(f"psgf_dp_comm,full_sync,coll_total={coll.get('total', 0):.3e}",
+              flush=True)
+
+        # leaf-granular Bernoulli gates have high byte variance (the embedding
+        # table is ~30% of this model's bytes), so average over mask draws
+        for r in (0.5, 0.3, 0.2):
+            totals = []
+            for seed in range(5):
+                rng = np.random.default_rng(seed)
+                share = P.sample_static_gates(rng, abs_params, r)
+                fwd = P.sample_static_gates(rng, abs_params, 0.2)
+                sel = (True, False)
+
+                def sync(l, g):
+                    return P.psgf_sync_static(l, g, share, fwd, sel)
+
+                coll = lower_and_count(sync, local, glob)
+                totals.append(coll.get("total", 0.0))
+            results[f"psgf_r{int(r*100)}"] = {
+                "total": float(np.mean(totals)),
+                "std": float(np.std(totals)),
+                "draws": totals,
+            }
+            print(f"psgf_dp_comm,psgf_r{int(r*100)},"
+                  f"coll_total={np.mean(totals):.3e}±{np.std(totals):.1e}",
+                  flush=True)
+
+    base = results["full_sync"].get("total", 0.0)
+    for k, v in results.items():
+        if k != "full_sync" and base:
+            v["fraction_of_full"] = v.get("total", 0.0) / base
+    save_json("psgf_dp", "comm", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,109 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+artifacts in experiments/. Run after dryrun + roofline sweeps:
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import EXP_DIR
+
+DRY = os.path.join(EXP_DIR, "dryrun")
+ROOF = os.path.join(EXP_DIR, "roofline")
+
+ARCHS = [
+    "deepseek-v2-236b", "internvl2-2b", "qwen2-1.5b", "phi3.5-moe-42b-a6.6b",
+    "mistral-large-123b", "hymba-1.5b", "command-r-plus-104b", "xlstm-125m",
+    "seamless-m4t-large-v2", "qwen2-72b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(path):
+    try:
+        return json.load(open(path))
+    except Exception:
+        return None
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | single-pod | multi-pod | per-dev args (GB) | per-dev temp (GB) | HLO GFLOPs/dev | coll MB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            cells = {}
+            for mesh in ("single", "multi"):
+                r = _load(os.path.join(DRY, f"{a}__{s}__{mesh}.json"))
+                cells[mesh] = r
+            r1, r2 = cells["single"], cells["multi"]
+            def stat(r):
+                if r is None:
+                    return "–"
+                return {"ok": "✅", "skipped": "skip", "error": "❌"}[r["status"]]
+            extra = ["", "", "", ""]
+            if r1 and r1.get("status") == "ok":
+                mem = r1.get("memory", {})
+                extra[0] = f"{mem.get('argument_size_in_bytes', 0)/1e9:.2f}"
+                extra[1] = f"{mem.get('temp_size_in_bytes', 0)/1e9:.2f}"
+                extra[2] = f"{r1.get('cost', {}).get('flops', 0)/1e9:.1f}"
+                extra[3] = f"{r1.get('collectives', {}).get('total', 0)/1e6:.1f}"
+            if r1 and r1.get("status") == "skipped":
+                extra[0] = r1.get("reason", "")[:40] + "…"
+            lines.append(f"| {a} | {s} | {stat(r1)} | {stat(r2)} | "
+                         + " | ".join(extra) + " |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | MODEL_FLOPS | useful ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = _load(os.path.join(ROOF, f"{a}__{s}.json"))
+            if r is None:
+                lines.append(f"| {a} | {s} | – | – | – | – | – | – |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {a} | {s} | {r['status']} | | | | | |")
+                continue
+            t = r["terms_s"]
+            lines.append(
+                f"| {a} | {s} | {t['compute']:.4f} | {t['memory']:.4f} | "
+                f"{t['collective']:.4f} | **{r['dominant']}** | "
+                f"{r['model_flops_total']:.3e} | {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def summarize_status():
+    ok = err = skip = missing = 0
+    for a in ARCHS:
+        for s in SHAPES:
+            for mesh in ("single", "multi"):
+                r = _load(os.path.join(DRY, f"{a}__{s}__{mesh}.json"))
+                if r is None:
+                    missing += 1
+                elif r["status"] == "ok":
+                    ok += 1
+                elif r["status"] == "skipped":
+                    skip += 1
+                else:
+                    err += 1
+    return dict(ok=ok, error=err, skipped=skip, missing=missing)
+
+
+def main():
+    print("## Dry-run status\n")
+    print(dryrun_table())
+    print("\nsummary:", summarize_status())
+    print("\n## Roofline\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

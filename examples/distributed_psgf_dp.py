@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""PSGF-DP demo: the paper's partial-sharing FL as a cross-pod training
+policy (DESIGN.md §4), on 8 virtual devices arranged (2 pods, 2 data, 2 model).
+
+Two pods train a reduced qwen2 on DIFFERENT data shards with H local steps
+between syncs; the sync step exchanges only a fraction of parameter leaves
+(plus a smaller forwarded subset) and we report wire bytes vs full sync.
+
+  PYTHONPATH=src python examples/distributed_psgf_dp.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import psgf_dp as P
+from repro.data.synthetic import synthetic_tokens
+from repro.launch.api import ModelApi
+from repro.optim import Adam
+
+
+def main():
+    n_pods = 2
+    mesh = jax.make_mesh((n_pods, 2, 2), ("pod", "data", "model"))
+    cfg = get_config("qwen2-1.5b").reduced()
+    api = ModelApi(cfg)
+    print(f"model: {cfg.name}; mesh: {dict(mesh.shape)}")
+
+    params = api.init_params(jax.random.PRNGKey(0))
+    local = P.stack_for_pods(params, n_pods)
+    glob = params
+    opt = Adam(lr=lambda t: 3e-4)
+    opt_state = jax.vmap(opt.init)(local)
+    step = jax.jit(P.make_local_train_step(api.loss_fn, opt))
+
+    dp_cfg = P.PSGFDPConfig(share_ratio=0.4, forward_ratio=0.2,
+                            select_ratio=0.5, sync_interval=4)
+    B, S = 4, 64
+    key = jax.random.PRNGKey(1)
+    psgf_bytes = full_bytes = 0.0
+    rng = np.random.default_rng(0)
+
+    with mesh:
+        for rnd in range(6):
+            for h in range(dp_cfg.sync_interval):
+                seed = rnd * 100 + h
+                toks = np.stack([
+                    synthetic_tokens(seed * n_pods + p_i, B, S + 1, cfg.vocab_size)
+                    for p_i in range(n_pods)])  # different data per pod
+                batch = {"tokens": jnp.asarray(toks[:, :, :-1]),
+                         "labels": jnp.asarray(toks[:, :, 1:])}
+                local, opt_state, loss = step(local, opt_state, batch)
+            # static-schedule PSGF sync (collectives only for shared leaves)
+            share = P.sample_static_gates(rng, glob, dp_cfg.share_ratio)
+            fwd = P.sample_static_gates(rng, glob, dp_cfg.forward_ratio)
+            sel = tuple(rng.random() < dp_cfg.select_ratio or i == 0
+                        for i in range(n_pods))
+            var_before = float(sum(jnp.var(l, axis=0).sum()
+                                   for l in jax.tree_util.tree_leaves(local)))
+            local, glob, stats = P.psgf_sync_static(local, glob, share, fwd, sel)
+            var_after = float(sum(jnp.var(l, axis=0).sum()
+                                  for l in jax.tree_util.tree_leaves(local)))
+            psgf_bytes += stats["wire_bytes"]
+            from repro.common.pytree_utils import tree_size_bytes
+            full_bytes += 2 * n_pods * tree_size_bytes(glob)
+            print(f"round {rnd}: loss {float(loss.mean()):.4f}  "
+                  f"pod-variance {var_before:.3e} -> {var_after:.3e}  "
+                  f"sync bytes {stats['wire_bytes']:.2e}")
+
+    print(f"\ncumulative sync wire bytes: PSGF {psgf_bytes:.3e} vs "
+          f"full-sync {full_bytes:.3e}  (saving {1 - psgf_bytes / full_bytes:.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Serving demo: batched prefill + autoregressive decode for any assigned
+architecture (reduced config on CPU).
+
+  PYTHONPATH=src python examples/serve_demo.py --arch hymba-1.5b
+  PYTHONPATH=src python examples/serve_demo.py --arch deepseek-v2-236b --gen 8
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+    serve(args.arch, args.batch, args.prompt_len, args.gen, reduced=True)
+
+
+if __name__ == "__main__":
+    main()

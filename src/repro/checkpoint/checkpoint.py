@@ -1,0 +1,78 @@
+"""Flat-file pytree checkpointing (npz payload + json manifest).
+
+Layout: <dir>/step_<n>/arrays.npz + manifest.json. Works for model params,
+optimizer state and FL server state alike; keys are the joined pytree paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    """Serialize a pytree of arrays. Returns the step directory."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    manifest = {"step": step, "keys": [], "extra": extra or {}}
+    for path, leaf in flat:
+        key = _path_str(path)
+        arrays[key] = np.asarray(leaf)
+        manifest["keys"].append({"key": key, "dtype": str(leaf.dtype),
+                                 "shape": list(leaf.shape)})
+    np.savez(os.path.join(step_dir, "arrays.npz"), **arrays)
+    with open(os.path.join(step_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return step_dir
+
+
+def load_checkpoint(ckpt_dir: str, template, step: int | None = None):
+    """Restore into the structure of ``template``. Returns (tree, extra)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    payload = np.load(os.path.join(step_dir, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        arr = payload[key]
+        if arr.dtype.kind == "V":
+            # npz round-trips ml_dtypes (bfloat16, ...) as raw void bytes
+            arr = arr.view(jnp.dtype(leaf.dtype))
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

@@ -1,0 +1,19 @@
+"""Hardware constants for the roofline model (TPU v5e target).
+
+The container is CPU-only; these constants describe the TARGET hardware used
+to convert dry-run FLOP/byte counts into roofline seconds (EXPERIMENTS.md).
+"""
+
+# Per-chip peak dense bf16 matmul throughput.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+# Per-chip HBM bandwidth.
+HBM_BW = 819e9  # B/s
+# Per-link ICI bandwidth (per direction).
+ICI_BW = 50e9  # B/s
+
+# Production mesh shapes (see launch/mesh.py).
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512
+
+# VMEM per core — BlockSpec working sets must fit here.
+VMEM_BYTES = 128 * 1024 * 1024

@@ -1,0 +1,81 @@
+"""Pytree helpers shared by the FL engine, optimizers and launchers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def count_params(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (uses each leaf's dtype)."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_flatten_to_vector(tree) -> tuple[jnp.ndarray, "TreeVectorMeta"]:
+    """Flatten a pytree of arrays into one 1-D vector (paper's `w` vector).
+
+    The paper's FL policies (eqs. 3-6) operate on the flattened parameter
+    vector `w in R^D`; this is the bridge between model pytrees and that view.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    vec = jnp.concatenate([jnp.ravel(l) for l in leaves]) if leaves else jnp.zeros((0,))
+    return vec, TreeVectorMeta(treedef=treedef, shapes=shapes, sizes=sizes)
+
+
+class TreeVectorMeta:
+    """Hashable so it can be a jit static argument."""
+
+    def __init__(self, treedef, shapes, sizes):
+        self.treedef = treedef
+        self.shapes = tuple(tuple(s) for s in shapes)
+        self.sizes = tuple(int(s) for s in sizes)
+        self.total = sum(sizes)
+
+    def __hash__(self):
+        return hash((self.treedef, self.shapes, self.sizes))
+
+    def __eq__(self, other):
+        return (
+            isinstance(other, TreeVectorMeta)
+            and self.treedef == other.treedef
+            and self.shapes == other.shapes
+            and self.sizes == other.sizes
+        )
+
+
+def tree_unflatten_from_vector(vec: jnp.ndarray, meta: TreeVectorMeta):
+    leaves = []
+    offset = 0
+    for shape, size in zip(meta.shapes, meta.sizes):
+        leaves.append(jnp.reshape(vec[offset : offset + size], shape))
+        offset += size
+    return jax.tree_util.tree_unflatten(meta.treedef, leaves)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_lerp(global_tree, local_tree, gate_tree):
+    """Per-leaf masked mix: gate * global + (1 - gate) * local (paper eq. 4/6)."""
+    return jax.tree_util.tree_map(
+        lambda g, l, m: m * g + (1.0 - m) * l, global_tree, local_tree, gate_tree
+    )

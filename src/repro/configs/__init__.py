@@ -1,0 +1,42 @@
+"""Config registry: ``get_config(arch_id)`` for every assigned architecture
+(plus the paper's own forecasting models via repro.core.forecast)."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "deepseek-v2-236b",
+    "internvl2-2b",
+    "qwen2-1.5b",
+    "phi3.5-moe-42b-a6.6b",
+    "mistral-large-123b",
+    "hymba-1.5b",
+    "command-r-plus-104b",
+    "xlstm-125m",
+    "seamless-m4t-large-v2",
+    "qwen2-72b",
+]
+
+_MODULES = {
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "internvl2-2b": "internvl2_2b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "mistral-large-123b": "mistral_large_123b",
+    "hymba-1.5b": "hymba_1_5b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "xlstm-125m": "xlstm_125m",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "qwen2-72b": "qwen2_72b",
+}
+
+
+def get_config(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,22 @@
+"""qwen2-1.5b [arXiv:2407.10671] — dense GQA with QKV bias.
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+12 heads are not divisible by the 16-way model axis => attention weights stay
+replicated on "model" (DESIGN.md §6); MLP (8960 = 16*560) and vocab shard.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    head_dim=128,
+    qkv_bias=True,
+    tie_embeddings=True,
+    source="arXiv:2407.10671",
+)

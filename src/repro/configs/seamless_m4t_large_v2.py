@@ -1,0 +1,23 @@
+"""seamless-m4t-large-v2 [arXiv:2308.11596] — encoder-decoder, multimodal.
+
+24L (split 24 enc + 24 dec per the model card's w2v-BERT encoder + text
+decoder) d_model=1024 16H kv=16 d_ff=8192 vocab=256206. The mel+conv speech
+frontend is STUBBED per spec: input_specs() provides frame embeddings.
+long_500k is skipped for this arch (bidirectional encoder is the quadratic
+bottleneck; DESIGN.md §6).
+"""
+from repro.models.config import ModelConfig, EncDecConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    head_dim=64,
+    encdec=EncDecConfig(enc_layers=24, dec_layers=24),
+    source="arXiv:2308.11596",
+)

@@ -1,0 +1,3 @@
+from repro.core.fl.masks import bernoulli_mask, exact_k_mask, client_masks
+from repro.core.fl.strategies import FLConfig, init_fl_state, fl_round
+from repro.core.fl.simulator import run_fl, evaluate_rmse

@@ -1,0 +1,39 @@
+"""Parameter-selection masks for the partial-sharing FL policies.
+
+The paper's S_n^i (sharing) and F_n^i (forwarding) matrices are DxD diagonal
+0/1 matrices; we represent them as boolean vectors over the flattened
+parameter vector (element granularity — the faithful mode). The datacenter
+variant (psgf_dp) uses leaf granularity instead; see repro/core/psgf_dp.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bernoulli_mask(key, dim: int, ratio: float) -> jnp.ndarray:
+    """iid Bernoulli(ratio) mask over the parameter vector. Communication is
+    accounted from the realized mask sum, so the inexact count is honest."""
+    return jax.random.uniform(key, (dim,)) < ratio
+
+
+def exact_k_mask(key, dim: int, k: int) -> jnp.ndarray:
+    """Mask with exactly k ones (paper's 'M ones for selected diagonal
+    elements'). O(D log D); used in tests and small models."""
+    scores = jax.random.uniform(key, (dim,))
+    thresh = -jnp.sort(-scores)[k - 1] if k > 0 else jnp.inf
+    return scores >= thresh
+
+
+def client_masks(key, num_clients: int, dim: int, ratio: float) -> jnp.ndarray:
+    """(K, D) independent masks, one per client."""
+    keys = jax.random.split(key, num_clients)
+    return jax.vmap(lambda k: bernoulli_mask(k, dim, ratio))(keys)
+
+
+def select_clients(key, num_clients: int, select_ratio: float) -> jnp.ndarray:
+    """Boolean (K,) with exactly round(K * ratio) selected clients."""
+    c = max(1, int(round(num_clients * select_ratio)))
+    perm = jax.random.permutation(key, num_clients)
+    sel = jnp.zeros((num_clients,), bool).at[perm[:c]].set(True)
+    return sel

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    ev_synthetic,
+    nn5_synthetic,
+    ett_like,
+    weather_like,
+)
+from repro.data.windowing import make_windows, split_windows, client_datasets
+from repro.data.clustering import dtw_distance_matrix, kmedoids

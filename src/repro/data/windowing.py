@@ -1,0 +1,63 @@
+"""Sliding-window dataset construction + chronological splits.
+
+The paper's FL task: look-back 128 steps, horizon 2 (EV) / 4 (NN5); data is
+cleaned by removing dead stations and aggregated to daily resolution (the
+generators already emit daily series).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def clean_clients(series: np.ndarray, min_active_frac: float = 0.5):
+    """Paper's cleaning: drop stations that stopped providing data. Here:
+    drop clients whose last-quarter activity is (near) zero or that are
+    mostly inactive overall."""
+    K, T = series.shape
+    tail = series[:, -T // 4 :]
+    active = (series > 0).mean(axis=1) >= min_active_frac * 0.5
+    alive_tail = (tail > 0).mean(axis=1) > 0.05
+    keep = active & alive_tail
+    return series[keep], np.nonzero(keep)[0]
+
+
+def make_windows(series: np.ndarray, look_back: int, horizon: int) -> np.ndarray:
+    """(K, T) -> (K, n_win, look_back + horizon), stride 1."""
+    K, T = series.shape
+    n = T - look_back - horizon + 1
+    assert n > 0, "series too short for the requested window"
+    idx = np.arange(look_back + horizon)[None, :] + np.arange(n)[:, None]
+    return series[:, idx]  # (K, n, L+T)
+
+
+def split_windows(windows: np.ndarray, train_frac=0.7, val_frac=0.1):
+    """Chronological split along the window axis (no leakage)."""
+    n = windows.shape[1]
+    n_tr = int(n * train_frac)
+    n_va = int(n * val_frac)
+    return (
+        windows[:, :n_tr],
+        windows[:, n_tr : n_tr + n_va],
+        windows[:, n_tr + n_va :],
+    )
+
+
+def client_datasets(series: np.ndarray, look_back: int, horizon: int,
+                    normalize: bool = True):
+    """Full per-client pipeline: clean -> (optional) per-client z-norm on the
+    train segment -> window -> chronological split.
+
+    Returns (train, val, test) arrays of shape (K, n_*, L+T) plus norm stats.
+    """
+    series, kept = clean_clients(series)
+    K, T = series.shape
+    n_tr_t = int(T * 0.8)
+    stats = None
+    if normalize:
+        mu = series[:, :n_tr_t].mean(axis=1, keepdims=True)
+        sd = series[:, :n_tr_t].std(axis=1, keepdims=True) + 1e-6
+        series = (series - mu) / sd
+        stats = (mu, sd)
+    w = make_windows(series, look_back, horizon)
+    tr, va, te = split_windows(w)
+    return tr, va, te, {"kept": kept, "norm": stats}

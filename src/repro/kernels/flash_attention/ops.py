@@ -1,0 +1,36 @@
+"""Jit'd public wrapper for the flash_attention Pallas kernel: pads sequence
+lengths to block multiples, dispatches, unpads. ``interpret=True`` executes
+the kernel body in Python on CPU (how this container validates it); on real
+TPUs the same call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=512, block_k=512, interpret=False):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, _round_up(Sq, 128))
+    bk = min(block_k, _round_up(Skv, 128))
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    out = flash_attention_kernel(qp, kp, vp, causal=causal, window=window,
+                                 block_q=bq, block_k=bk, kv_len=Skv,
+                                 interpret=interpret)
+    return out[:, :Sq]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

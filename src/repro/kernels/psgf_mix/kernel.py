@@ -1,0 +1,56 @@
+"""Pallas TPU kernel for the paper's masked parameter mix (eqs. 4 & 6):
+
+    w_out = S * w_global + (I - S) * w_local
+
+fused with the communication accounting reduction sum(S) — the quantity the
+paper's "#Params (Comm.)" column tracks. On the server this runs once per
+round over the full flattened parameter vector (D ~ 5.4e5 for LoGTST, up to
+~1e11 for the PSGF-DP variant), a purely memory-bound streaming op: the fusion
+saves one full pass over the mask versus separate mix + reduce.
+
+Layout: the 1-D vector is viewed as (rows, 128) lanes and tiled in
+(block_rows, 128) VMEM blocks — (8,128)-aligned for the VPU. The per-block
+mask count is written to a (grid,) partial-sum output and reduced by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _kernel(wg_ref, wl_ref, m_ref, out_ref, cnt_ref):
+    m = m_ref[...]
+    out_ref[...] = (m * wg_ref[...] + (1.0 - m) * wl_ref[...]).astype(out_ref.dtype)
+    cnt_ref[0] = jnp.sum(m.astype(jnp.float32))
+
+
+def psgf_mix_kernel(w_global, w_local, mask, *, block_rows=256, interpret=False):
+    """All inputs: (rows, 128) f32. Returns (mixed (rows,128), counts (grid,))."""
+    rows = w_global.shape[0]
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), w_global.dtype),
+            jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_global, w_local, mask)

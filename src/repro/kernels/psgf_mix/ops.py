@@ -1,0 +1,31 @@
+"""Jit'd wrapper for the psgf_mix kernel: 1-D vector <-> (rows,128) layout,
+padding with mask=0 (padding contributes local values and zero count)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.psgf_mix.kernel import LANES, psgf_mix_kernel
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def psgf_mix(w_global, w_local, mask, *, block_rows=256, interpret=False):
+    """w_global/w_local: (D,) float; mask: (D,) bool/float.
+    Returns (mixed (D,), count scalar f32)."""
+    D = w_global.shape[0]
+    m = mask.astype(w_global.dtype)
+    rows_unit = LANES * min(block_rows, max(1, D // LANES))
+    pad = (-D) % (LANES * 8)
+    wg = jnp.pad(w_global, (0, pad))
+    wl = jnp.pad(w_local, (0, pad))
+    mp = jnp.pad(m, (0, pad))
+    rows = wg.shape[0] // LANES
+    br = min(block_rows, rows)
+    while rows % br:
+        br -= 1
+    mixed, counts = psgf_mix_kernel(
+        wg.reshape(rows, LANES), wl.reshape(rows, LANES), mp.reshape(rows, LANES),
+        block_rows=br, interpret=interpret)
+    return mixed.reshape(-1)[:D], jnp.sum(counts)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for psgf_mix: eq. 4/6 masked mix + comm count."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def psgf_mix_ref(w_global, w_local, mask):
+    """1-D inputs (D,). Returns (mixed (D,), count scalar)."""
+    m = mask.astype(w_global.dtype)
+    mixed = m * w_global + (1.0 - m) * w_local
+    return mixed, jnp.sum(m.astype(jnp.float32))

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for ssm_scan: straightforward lax.scan over time."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, Bm, Cm, A):
+    """x, dt: (B,S,D); Bm,Cm: (B,S,N); A: (D,N) -> y (B,S,D)."""
+    B, S, D = x.shape
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)
+        h = dA * h + (dt_t * x_t)[..., None].astype(jnp.float32) * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((B, D, A.shape[1]), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,172 @@
+"""ModelApi: one facade over the decoder-only and encoder-decoder model
+implementations, plus abstract input construction for the dry-run.
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable ShapeDtypeStruct stand-ins for every model input — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decoder, encdec
+from repro.models.config import ModelConfig
+from repro.launch.shapes import InputShape
+from repro.sharding.rules import ShardingRules, logical_to_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+
+    @property
+    def mod(self):
+        return encdec if self.cfg.family == "audio" else decoder
+
+    # --- params ------------------------------------------------------------
+    def init_params(self, key):
+        return self.mod.init_params(self.cfg, key)
+
+    def param_axes(self):
+        return self.mod.param_axes(self.cfg)
+
+    def abstract_params(self, dtype=None):
+        ap = self.mod.abstract_params(self.cfg)
+        if dtype is not None:
+            ap = cast_float_structs(ap, dtype)
+        return ap
+
+    # --- steps ---------------------------------------------------------------
+    def loss_fn(self, params, batch):
+        return self.mod.loss_fn(self.cfg, params, batch)
+
+    def prefill(self, params, batch, cache_len=None):
+        if self.cfg.family == "audio":
+            return encdec.prefill(self.cfg, params, batch["src_embeds"],
+                                  batch["tokens"], cache_len=cache_len)
+        return decoder.prefill(self.cfg, params, batch["tokens"],
+                               batch.get("img_embeds"), cache_len=cache_len)
+
+    def decode_step(self, params, cache, token, pos):
+        return self.mod.decode_step(self.cfg, params, cache, token, pos)
+
+    # --- cache ---------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, dtype=None, src_len: int = 1):
+        if self.cfg.family == "audio":
+            return encdec.init_cache(self.cfg, batch, cache_len, dtype, src_len=src_len)
+        return decoder.init_cache(self.cfg, batch, cache_len, dtype)
+
+    def abstract_cache(self, batch: int, cache_len: int, dtype=None, src_len: int = 1):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, cache_len, dtype, src_len=src_len)
+        )
+
+    def cache_axes(self, context_parallel: bool = False):
+        return self.mod.cache_axes(self.cfg, context_parallel)
+
+
+def cast_float_structs(tree, dtype):
+    """Cast float ShapeDtypeStructs to dtype (e.g. bf16 weights at serve)."""
+
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dtype,
+                                        sharding=getattr(x, "sharding", None))
+        return x
+
+    return jax.tree_util.tree_map(cast, tree)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs per (cfg, shape)
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(cfg: ModelConfig, shape: InputShape, kind: str):
+    """Logical-axis trees for the input batch (mirrors input_structs)."""
+    if kind == "train" or kind == "prefill":
+        if cfg.family == "audio":
+            ax = {"src_embeds": ("batch", None, None), "tokens": ("batch", None)}
+        elif cfg.family == "vlm":
+            ax = {"img_embeds": ("batch", None, None), "tokens": ("batch", None)}
+        else:
+            ax = {"tokens": ("batch", None)}
+        if kind == "train":
+            ax["labels"] = ("batch", None)
+        return ax
+    raise ValueError(kind)
+
+
+def input_structs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStructs (unsharded) for the step inputs of ``shape.kind``."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = cfg.activation_dtype
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            half = S // 2
+            batch = {
+                "src_embeds": jax.ShapeDtypeStruct((B, half, cfg.d_model), act),
+                "tokens": jax.ShapeDtypeStruct((B, half), i32),
+            }
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, half), i32)
+        elif cfg.family == "vlm":
+            P = cfg.vlm.num_patches
+            batch = {
+                "img_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), act),
+                "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+            }
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, S - P), i32)
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return batch
+    if shape.kind == "decode":
+        api = ModelApi(cfg)
+        src_len = S // 2 if cfg.family == "audio" else 1
+        cache = api.abstract_cache(B, S, src_len=src_len)
+        return {
+            "cache": cache,
+            "token": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape.kind)
+
+
+def shard_structs(structs, axes_tree, rules: ShardingRules):
+    """Attach NamedShardings derived from logical axes to ShapeDtypeStructs."""
+    shapes = jax.tree_util.tree_map(lambda s: s.shape, structs)
+    shardings = logical_to_sharding(axes_tree, rules, shapes)
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        structs, shardings,
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, rules: Optional[ShardingRules] = None):
+    """Sharded abstract inputs for the dry-run. For decode shapes this is
+    {cache, token, pos}; batch=1 long-context shards the cache sequence over
+    the data axis instead (context parallelism)."""
+    structs = input_structs(cfg, shape)
+    if rules is None:
+        return structs
+    if shape.kind in ("train", "prefill"):
+        axes = batch_axes(cfg, shape, shape.kind)
+        return shard_structs(structs, axes, rules)
+    # decode
+    data_par = rules.axis_size(rules.table.get("batch"))
+    context_parallel = shape.global_batch % max(data_par, 1) != 0
+    api = ModelApi(cfg)
+    cache_ax = api.cache_axes(context_parallel=context_parallel)
+    out = dict(structs)
+    out["cache"] = shard_structs(structs["cache"], cache_ax, rules)
+    tok_ax = (None, None) if context_parallel else ("batch", None)
+    out["token"] = shard_structs(structs["token"], tok_ax, rules)
+    return out

@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) combo
+lowers AND compiles on the production meshes, and harvest roofline inputs.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices for the
+(2,16,16)/(16,16) production meshes. Smoke tests and benches do NOT set this
+(they see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod/--single-pod]
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, shape_supported, shape_variant
+from repro.launch.steps import (
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+    make_optimizer,
+    sharded_serve_inputs,
+    sharded_train_inputs,
+)
+
+OUT_DIR = os.environ.get(
+    "DRYRUN_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"))
+
+
+def lower_combo(arch_id: str, shape_name: str, multi_pod: bool, cfg_override=None):
+    """Lower + compile one combo; returns the result record."""
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or get_config(arch_id)
+    ok, reason = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+    cfg = shape_variant(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            fn, api, rules, optimizer = build_train_step(cfg, mesh)
+            params, opt, batch = sharded_train_inputs(cfg, shape, rules, optimizer)
+            lowered = fn.lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            fn, api, rules = build_prefill_step(cfg, mesh)
+            params, batch = sharded_serve_inputs(cfg, shape, rules)
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            fn, api, rules = build_serve_step(cfg, mesh)
+            params, rest = sharded_serve_inputs(cfg, shape, rules)
+            lowered = fn.lower(params, rest["cache"], rest["token"], rest["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = hlo_analysis.memory_summary(compiled)
+    cost = hlo_analysis.cost_summary(compiled)
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    print(compiled.memory_analysis())
+    print({k: v for k, v in cost.items()})
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": dict(mesh.shape),
+        "status": "ok",
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost": cost,
+        "collectives": coll,
+        "dropped_shardings": sorted(str(d) for d in rules.dropped),
+    }
+    return rec
+
+
+def save(rec):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    fname = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(OUT_DIR, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return fname
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod or args.all:
+        meshes.append(True)
+
+    failures = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                fname = f"{arch}__{shp}__{'multi' if mp else 'single'}.json"
+                if args.skip_existing and os.path.exists(os.path.join(OUT_DIR, fname)):
+                    print(f"SKIP(existing) {fname}")
+                    continue
+                print(f"=== dryrun {arch} x {shp} x {'multi' if mp else 'single'} ===",
+                      flush=True)
+                try:
+                    rec = lower_combo(arch, shp, mp)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shp,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                save(rec)
+                print(f"-> {rec['status']}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""HLO post-processing: collective-byte accounting for the roofline.
+
+``cost_analysis()`` has no collective term, so we parse the optimized HLO
+(``compiled.as_text()``) and sum result sizes of every collective op.
+
+Bytes-on-wire model (per participating device, ring algorithms):
+  all-gather        : result bytes (each device receives ~the full result)
+  reduce-scatter    : result bytes
+  all-reduce        : 2 x result bytes (reduce-scatter + all-gather phases)
+  all-to-all        : result bytes
+  collective-permute: result bytes
+
+Collectives inside a while (lax.scan) body appear once in the text; the
+roofline tool extrapolates per-layer costs from unrolled reduced-depth
+variants instead (benchmarks/roofline.py), so no trip-count factor here.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9,\{\}\s]*\})\}")
+
+
+def _groups_span_pods(line: str, pod_size: int) -> bool:
+    """True if the op's replica groups contain devices from different pods
+    (device // pod_size differs within a group). Handles both the iota
+    ("[G,S]<=[dims]T(perm)") and explicit ("{{0,1},{2,3}}") formats.
+    Conservatively returns True when no groups are found (flat participation).
+    """
+    import numpy as np
+
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        rows = ids.reshape(g, s)
+        pods = rows // pod_size
+        return bool((pods != pods[:, :1]).any())
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        for grp in re.findall(r"\{([0-9,\s]*)\}", m.group(1)):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if ids and len({i // pod_size for i in ids}) > 1:
+                return True
+        return False
+    return True
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str, pod_size: int | None = None) -> dict:
+    """Returns {'all-gather': bytes, ..., 'total': bytes, 'count': n_ops}.
+
+    With ``pod_size`` set (e.g. 256), also reports 'cross_pod': the byte sum
+    of collectives whose replica groups span pod boundaries — per-device ring
+    bytes are group-size-invariant, so this classification (not the total) is
+    what distinguishes pod-interconnect traffic.
+    """
+    out = defaultdict(float)
+    count = 0
+    cross_pod = 0.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        rhs = rhs.strip()
+        op = None
+        for c in _COLLECTIVES:
+            # match "all-reduce(", "all-gather-start(", fused variants
+            if rhs.startswith(c + "(") or rhs.split("(")[0].rstrip("-start").rstrip(
+                "-done"
+            ) == c or re.match(rf"\(?[a-z0-9\[\]{{}},\s]*\)?\s*{c}\(", rhs):
+                op = c
+                break
+        if op is None:
+            # result type precedes the op name: "f32[..]{..} all-reduce(...)"
+            m = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start)?\(", rhs)
+            if m:
+                op = m.group(1)
+        if op is None:
+            continue
+        if "-done(" in rhs:
+            continue  # avoid double counting start/done pairs
+        # result type(s): everything in rhs before the op keyword
+        head = rhs.split(op)[0]
+        shapes = _SHAPE_RE.findall(head)
+        if not shapes:
+            continue
+        b = sum(_shape_bytes(d, s) for d, s in shapes)
+        if op == "all-reduce":
+            b *= 2
+        out[op] += b
+        count += 1
+        if pod_size is not None and _groups_span_pods(stripped, pod_size):
+            cross_pod += b
+    out["total"] = sum(out[c] for c in _COLLECTIVES if c in out)
+    out["count"] = count
+    if pod_size is not None:
+        out["cross_pod"] = cross_pod
+    return dict(out)
+
+
+def cost_summary(compiled) -> dict:
+    """Normalized cost_analysis: flops + bytes accessed."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, list):
+        ca = ca[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    # per-memory-space byte entries if present
+    for k, v in ca.items():
+        if k.startswith("bytes accessed"):
+            out[k.replace(" ", "_")] = float(v)
+    return out
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "host_argument_size_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    return out

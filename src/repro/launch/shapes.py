@@ -1,0 +1,63 @@
+"""Assigned input shapes + per-(arch,shape) applicability and config variants.
+
+  train_4k       seq_len=4096    global_batch=256  (training)
+  prefill_32k    seq_len=32768   global_batch=32   (inference-prefill)
+  decode_32k     seq_len=32768   global_batch=128  (inference-decode)
+  long_500k      seq_len=524288  global_batch=1    (long-context-decode)
+
+Decode shapes lower ``serve_step`` (ONE token + KV cache of seq_len).
+long_500k applicability (DESIGN.md §6):
+  * hymba/xlstm: native (window + SSM / recurrent state);
+  * deepseek-v2: full attention over the COMPRESSED MLA latent cache
+    (O(seq) per token, 576 B/token/layer) — context-parallel over "data";
+  * other dense/moe/vlm: explicit sliding-window variant (window 8192);
+  * seamless-m4t: SKIPPED (enc-dec; bidirectional encoder is quadratic).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+LONG_WINDOW = 8192  # sliding-window used by dense archs for long_500k
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-not)."""
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            return False, ("enc-dec: 500k-target decode implies a proportionally "
+                           "long bidirectional (quadratic) encoder; skipped per DESIGN.md §6")
+    return True, ""
+
+
+def shape_variant(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Config adjustments a shape requires (the sliding-window long-context
+    variant for full-attention archs)."""
+    if shape.name == "long_500k" and cfg.attention_window is None:
+        if cfg.mla is not None:
+            return cfg  # MLA: full attention over the compressed latent cache
+        if cfg.family in ("dense", "vlm", "moe"):
+            return dataclasses.replace(cfg, attention_window=LONG_WINDOW)
+    return cfg
+
+
+def reduced_shape(shape: InputShape, seq_len: int = 64, batch: int = 4) -> InputShape:
+    """Smoke-test-sized version of a shape."""
+    return InputShape(shape.name + "-smoke", seq_len, batch, shape.kind)

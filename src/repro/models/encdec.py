@@ -1,0 +1,244 @@
+"""Encoder-decoder transformer (seamless-m4t-large-v2 backbone).
+
+Per spec, the mel-spectrogram + conv feature extractor frontend is STUBBED:
+``input_specs`` provides precomputed frame embeddings (B, src_len, d_model).
+We implement the transformer backbone: bidirectional encoder over frames,
+autoregressive text decoder with cross-attention.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import spec as S
+from repro.models.config import ModelConfig
+
+
+def enc_block_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "ln1": L.norm_spec(d),
+        "attn": L.attention_spec(cfg),
+        "ln2": L.norm_spec(d),
+        "mlp": L.mlp_spec(d, cfg.d_ff, gated=False),
+    }
+
+
+def dec_block_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "ln1": L.norm_spec(d),
+        "self_attn": L.attention_spec(cfg),
+        "ln2": L.norm_spec(d),
+        "cross_attn": L.attention_spec(cfg),
+        "ln3": L.norm_spec(d),
+        "mlp": L.mlp_spec(d, cfg.d_ff, gated=False),
+    }
+
+
+def model_spec(cfg: ModelConfig):
+    ed = cfg.encdec
+    return {
+        "enc_blocks": S.stack_layers(enc_block_spec(cfg), ed.enc_layers),
+        "enc_norm": L.norm_spec(cfg.d_model),
+        "embed": L.embed_spec(cfg),
+        "dec_blocks": S.stack_layers(dec_block_spec(cfg), ed.dec_layers),
+        "final_norm": L.norm_spec(cfg.d_model),
+        "head": L.head_spec(cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    return S.init_params(model_spec(cfg), key)
+
+
+def param_axes(cfg: ModelConfig):
+    return S.axes_tree(model_spec(cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    return S.abstract_params(model_spec(cfg))
+
+
+def encode(cfg: ModelConfig, params, src_embeds, attn_impl="auto"):
+    """src_embeds: (B, Ssrc, d) from the stubbed frontend."""
+    x = src_embeds.astype(cfg.activation_dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, p):
+        h = L.rms_norm(carry, p["ln1"]["scale"], cfg.norm_eps)
+        carry = carry + L.self_attention(p["attn"], h, positions, cfg,
+                                         causal=False, attn_impl=attn_impl)
+        h = L.rms_norm(carry, p["ln2"]["scale"], cfg.norm_eps)
+        carry = carry + L.mlp_apply(p["mlp"], h, gated=False)
+        return carry, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        for i in range(cfg.encdec.enc_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["enc_blocks"])
+            x, _ = body(x, p_i)
+        return L.rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def _dec_block(cfg, p, x, positions, enc_out, src_valid, attn_impl):
+    h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    x = x + L.self_attention(p["self_attn"], h, positions, cfg, causal=True,
+                             window=cfg.attention_window, attn_impl=attn_impl)
+    h = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    ck = jnp.einsum("btd,dhk->bthk", enc_out, p["cross_attn"]["wk"].astype(x.dtype))
+    cv = jnp.einsum("btd,dhk->bthk", enc_out, p["cross_attn"]["wv"].astype(x.dtype))
+    x = x + L.cross_attention(p["cross_attn"], h, ck, cv, src_valid, cfg)
+    h = L.rms_norm(x, p["ln3"]["scale"], cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], h, gated=False)
+    return x
+
+
+def forward(cfg: ModelConfig, params, src_embeds, tgt_tokens, attn_impl="auto"):
+    enc_out = encode(cfg, params, src_embeds, attn_impl)
+    src_valid = jnp.ones(enc_out.shape[:2], bool)
+    x = L.embed_apply(params["embed"], tgt_tokens, cfg.activation_dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, p):
+        return _dec_block(cfg, p, carry, positions, enc_out, src_valid, attn_impl), ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        for i in range(cfg.encdec.dec_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["dec_blocks"])
+            x, _ = body(x, p_i)
+    else:
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return L.head_apply(params["head"], params["embed"], x, cfg)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, attn_impl="auto"):
+    logits = forward(cfg, params, batch["src_embeds"], batch["tokens"], attn_impl)
+    ce = L.cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# --- serving -----------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None,
+               src_len: int = 1):
+    """Decoder self-attn KV cache + per-layer cross K/V (filled at prefill)."""
+    dtype = dtype or cfg.activation_dtype
+    ed = cfg.encdec
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    window = cfg.attention_window
+    phys = cache_len if window is None else min(window, cache_len)
+    return {
+        "self_kv": {
+            "k": jnp.zeros((ed.dec_layers, batch, phys, KV, hd), dtype),
+            "v": jnp.zeros((ed.dec_layers, batch, phys, KV, hd), dtype),
+            "slot_pos": jnp.full((ed.dec_layers, phys), -1, jnp.int32),
+        },
+        "cross": {
+            "k": jnp.zeros((ed.dec_layers, batch, src_len, KV, hd), dtype),
+            "v": jnp.zeros((ed.dec_layers, batch, src_len, KV, hd), dtype),
+        },
+    }
+
+
+def cache_axes(cfg: ModelConfig, context_parallel: bool = False):
+    seq_ax = "batch" if context_parallel else None
+    bt_ax = None if context_parallel else "batch"
+    return {
+        "self_kv": {
+            "k": ("layers", bt_ax, seq_ax, "kv_heads", "head_dim"),
+            "v": ("layers", bt_ax, seq_ax, "kv_heads", "head_dim"),
+            "slot_pos": ("layers", seq_ax),
+        },
+        "cross": {
+            "k": ("layers", bt_ax, seq_ax, "kv_heads", "head_dim"),
+            "v": ("layers", bt_ax, seq_ax, "kv_heads", "head_dim"),
+        },
+    }
+
+
+def prefill(cfg: ModelConfig, params, src_embeds, tgt_tokens, attn_impl="auto",
+            cache_len: Optional[int] = None):
+    """Encode source; run decoder over the target prefix capturing KV."""
+    enc_out = encode(cfg, params, src_embeds, attn_impl)
+    src_valid = jnp.ones(enc_out.shape[:2], bool)
+    x = L.embed_apply(params["embed"], tgt_tokens, cfg.activation_dtype)
+    B, Stot = x.shape[0], x.shape[1]
+    cache_len = cache_len or Stot
+    positions = jnp.arange(Stot, dtype=jnp.int32)
+    window = cfg.attention_window
+    phys = cache_len if window is None else min(window, cache_len)
+
+    from repro.models.decoder import _to_cache_layout
+
+    def body(carry, p):
+        h = L.rms_norm(carry, p["ln1"]["scale"], cfg.norm_eps)
+        q, k, v = L._qkv(p["self_attn"], h, cfg)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        (kc, vc), sp = _to_cache_layout([k, v], positions, phys, Stot)
+        ck = jnp.einsum("btd,dhk->bthk", enc_out, p["cross_attn"]["wk"].astype(carry.dtype))
+        cv = jnp.einsum("btd,dhk->bthk", enc_out, p["cross_attn"]["wv"].astype(carry.dtype))
+        y = _dec_block(cfg, p, carry, positions, enc_out, src_valid, attn_impl)
+        return y, {"self_kv": {"k": kc, "v": vc, "slot_pos": sp},
+                   "cross": {"k": ck, "v": cv}}
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        entries = []
+        for i in range(cfg.encdec.dec_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["dec_blocks"])
+            x, e = body(x, p_i)
+            entries.append(e)
+        cache = jax.tree_util.tree_map(lambda *cs: jnp.stack(cs), *entries)
+    else:
+        x, cache = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = L.head_apply(params["head"], params["embed"], x[:, -1:, :], cfg)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    """One decoder step with frozen cross K/V. token: (B,1); pos scalar."""
+    x = L.embed_apply(params["embed"], token, cfg.activation_dtype)
+    B = x.shape[0]
+    Ssrc = cache["cross"]["k"].shape[2]
+    src_valid = jnp.ones((B, Ssrc), bool)
+
+    def body(carry, inp):
+        p, sc, cc = inp
+        h = L.rms_norm(carry, p["ln1"]["scale"], cfg.norm_eps)
+        a, new_sc = L.decode_attention(p["self_attn"], h, sc, pos, cfg)
+        carry = carry + a
+        h = L.rms_norm(carry, p["ln2"]["scale"], cfg.norm_eps)
+        carry = carry + L.cross_attention(p["cross_attn"], h, cc["k"], cc["v"],
+                                          src_valid, cfg)
+        h = L.rms_norm(carry, p["ln3"]["scale"], cfg.norm_eps)
+        carry = carry + L.mlp_apply(p["mlp"], h, gated=False)
+        return carry, new_sc
+
+    if cfg.unroll_layers:
+        news = []
+        for i in range(cfg.encdec.dec_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["dec_blocks"])
+            sc_i = jax.tree_util.tree_map(lambda a: a[i], cache["self_kv"])
+            cc_i = jax.tree_util.tree_map(lambda a: a[i], cache["cross"])
+            x, nc = body(x, (p_i, sc_i, cc_i))
+            news.append(nc)
+        new_self = jax.tree_util.tree_map(lambda *cs: jnp.stack(cs), *news)
+    else:
+        x, new_self = jax.lax.scan(body, x, (params["dec_blocks"], cache["self_kv"],
+                                             cache["cross"]))
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = L.head_apply(params["head"], params["embed"], x, cfg)
+    return logits, {"self_kv": new_self, "cross": cache["cross"]}

@@ -1,0 +1,975 @@
+"""Core neural-net layers for the model zoo (pure JAX, params = dict pytrees).
+
+Everything is written against :class:`repro.models.config.ModelConfig`; spec
+builders (``*_spec``) declare shapes + logical sharding axes, apply functions
+implement the math. Attention includes a memory-bounded chunked (flash-style)
+jnp path used for long sequences and as the oracle for the Pallas kernel.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.spec import ArraySpec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_spec(d):
+    return {"scale": ArraySpec((d,), ("act_embed",), init="ones")}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / sliding-window, full and chunked paths)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def attention_spec(cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    spec = {
+        "wq": ArraySpec((d, H, hd), ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": ArraySpec((d, KV, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wv": ArraySpec((d, KV, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wo": ArraySpec((H, hd, d), ("heads", "head_dim", "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ArraySpec((H, hd), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = ArraySpec((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = ArraySpec((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+def _qkv(params, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int], k_valid=None):
+    """Additive mask bias (..., Sq, Sk) from absolute positions. Padded key
+    slots carry k_pos == int32 max and are always excluded."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    allowed = kp < jnp.iinfo(jnp.int32).max  # block-padding keys
+    allowed = jnp.broadcast_to(allowed, jnp.broadcast_shapes(qp.shape, kp.shape))
+    if causal:
+        allowed &= kp <= qp
+    if window is not None:
+        allowed &= kp > qp - window
+    if k_valid is not None:
+        allowed &= k_valid[..., None, :]
+    return jnp.where(allowed, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def gqa_attend(q, k, v, bias):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd); bias: broadcastable (B,1,Sq,Sk).
+
+    Materializes (B,KV,G,Sq,Sk) scores — fine for short Sq (decode, smoke);
+    long sequences use :func:`chunked_attend`.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    hd_v = v.shape[3]  # may differ from hd (MLA: qk_dim != v_head_dim)
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd) + bias[:, :, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, Sq, H, hd_v)
+
+
+def chunked_attend(q, k, v, q_pos, k_pos, causal=True, window=None,
+                   block_q: int = 512, block_k: int = 512,
+                   remat_inner: bool = True):
+    """Flash-style online-softmax attention in pure jnp (double lax.scan).
+
+    Memory is O(block_q * block_k) per step instead of O(Sq * Sk). This is the
+    XLA execution path for long sequences AND the oracle (ref) the Pallas
+    flash_attention kernel is validated against.
+    q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd); q_pos: (Sq,), k_pos: (Sk,).
+
+    ``remat_inner`` wraps the kv-block step in jax.checkpoint: without it the
+    backward pass stores every step's (bq x bk) score/prob tiles — O(Sq*Sk)
+    residuals, exactly what flash attention exists to avoid (§Perf iteration 1
+    in EXPERIMENTS.md measures the difference).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    hd_v = v.shape[3]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=jnp.iinfo(jnp.int32).max)
+    nq, nk = q.shape[1] // block_q, k.shape[1] // block_k
+    qb = q.reshape(B, nq, block_q, KV, G, hd)
+    kb = k.reshape(B, nk, block_k, KV, hd)
+    vb = v.reshape(B, nk, block_k, KV, hd_v)
+    qpb = q_pos.reshape(nq, block_q)
+    kpb = k_pos.reshape(nk, block_k)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_step(_, qi):
+        qblk, qp = qi  # (B, bq, KV, G, hd), (bq,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = ki
+            s = jnp.einsum("bskgd,btkd->bkgst", qblk, kblk).astype(jnp.float32) * scale
+            bias = _mask_bias(qp, kp, causal, window)  # (bq, bk)
+            s = s + bias[None, None, None, :, :]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p.astype(qblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), ()
+
+        m0 = jnp.full((B, KV, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, block_q, hd_v), jnp.float32)
+        step = jax.checkpoint(kv_step) if remat_inner else kv_step
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kpb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(qblk.dtype)  # (B,KV,G,bq,hd)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.moveaxis(qb, 1, 0), qpb))
+    # outs: (nq, B, KV, G, bq, hd_v) -> (B, Sq, H, hd_v)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    out = out.reshape(B, nq * block_q, H, hd_v)
+    return out[:, :Sq]
+
+
+CHUNKED_ATTN_THRESHOLD = 2048  # switch to the chunked path above this Sq
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with a custom VJP (§Perf iteration A4).
+#
+# Differentiating the double-scan forward makes lax.scan save its carries
+# (m, l, acc — an O(B·H·S·hd) f32 tile PER kv step) as residuals, which is
+# exactly the O(S^2)-ish blowup flash attention exists to avoid. The custom
+# VJP stores only (q, k, v, out, lse) and recomputes p-tiles blockwise in the
+# backward pass (standard flash backward: Dao et al.).
+# ---------------------------------------------------------------------------
+
+
+def _flash_blocks(q, k, v, q_pos, k_pos, block_q, block_k):
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    hd_v = v.shape[3]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=jnp.iinfo(jnp.int32).max)
+    nq = q.shape[1] // bq
+    nk = k.shape[1] // bk
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, KV, G, hd), 1, 0)        # (nq,B,bq,KV,G,hd)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, KV, hd), 1, 0)           # (nk,B,bk,KV,hd)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, KV, hd_v), 1, 0)
+    qpb = q_pos.reshape(nq, bq)
+    kpb = k_pos.reshape(nk, bk)
+    return qb, kb, vb, qpb, kpb, (B, Sq, Sk, H, KV, G, hd, hd_v, bq, bk, nq, nk)
+
+
+def _flash_fwd_impl(q, k, v, q_pos, k_pos, causal, window, block_q, block_k):
+    qb, kb, vb, qpb, kpb, dims = _flash_blocks(q, k, v, q_pos, k_pos, block_q, block_k)
+    B, Sq, Sk, H, KV, G, hd, hd_v, bq, bk, nq, nk = dims
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_step(_, qi):
+        qblk, qp = qi
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = ki
+            s = jnp.einsum("bskgd,btkd->bkgst", qblk, kblk).astype(jnp.float32) * scale
+            s = s + _mask_bias(qp, kp, causal, window)[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p.astype(qblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc), ()
+
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpb))
+        out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(qblk.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qb, qpb))
+    # outs: (nq,B,KV,G,bq,hd_v) -> (B,Sq,H,hd_v); lse: (nq,B,KV,G,bq)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5).reshape(
+        B, nq * bq, H, hd_v)[:, :Sq]
+    lse = jnp.moveaxis(lses, 0, 1).transpose(0, 1, 4, 2, 3).reshape(
+        B, nq * bq, H)[:, :Sq]
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_mha(q, k, v, q_pos, k_pos, causal=True, window=None,
+              block_q=512, block_k=512):
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, k_pos, causal, window,
+                             block_q, block_k)
+    return out
+
+
+def _flash_mha_fwd(q, k, v, q_pos, k_pos, causal, window, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, k_pos, causal, window,
+                               block_q, block_k)
+    return out, (q, k, v, q_pos, k_pos, out, lse)
+
+
+def _flash_mha_bwd(causal, window, block_q, block_k, res, dout):
+    q, k, v, q_pos, k_pos, out, lse = res
+    qb, kb, vb, qpb, kpb, dims = _flash_blocks(q, k, v, q_pos, k_pos, block_q, block_k)
+    B, Sq, Sk, H, KV, G, hd, hd_v, bq, bk, nq, nk = dims
+    scale = 1.0 / math.sqrt(hd)
+    pad_q = nq * bq - Sq
+
+    def qblocks(a, feat):  # (B,Sq,H,f) -> (nq, B, bq, KV, G, f)
+        if pad_q:
+            a = jnp.pad(a, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        return jnp.moveaxis(a.reshape(B, nq, bq, KV, G, feat), 1, 0)
+
+    dob = qblocks(dout, hd_v)
+    ob = qblocks(out, hd_v)
+    lse_p = jnp.pad(lse, ((0, 0), (0, pad_q), (0, 0)),
+                    constant_values=0.0) if pad_q else lse
+    # (B,Sq,H) -> (nq,B,KV,G,bq)
+    lseb = jnp.moveaxis(lse_p.reshape(B, nq, bq, KV, G), 1, 0).transpose(0, 1, 3, 4, 2)
+    # D_i = rowsum(dout * out): (nq,B,KV,G,bq)
+    Db = jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32),
+                 axis=-1).transpose(0, 1, 3, 4, 2)
+
+    def q_step(carry, qi):
+        dk_acc, dv_acc = carry  # (nk,B,bk,KV,hd[/hd_v]) accumulators
+        qblk, qp, doblk, lse_q, D_q = qi  # lse_q/D_q: (B,KV,G,bq)
+
+        def kv_step(dq_blk, ki):
+            kblk, vblk, kp, ik = ki
+            s = jnp.einsum("bskgd,btkd->bkgst", qblk, kblk).astype(jnp.float32) * scale
+            s = s + _mask_bias(qp, kp, causal, window)[None, None, None]
+            p = jnp.exp(s - lse_q[..., None])  # exact softmax probs via saved lse
+            dp = jnp.einsum("bskgd,btkd->bkgst", doblk, vblk).astype(jnp.float32)
+            ds = p * (dp - D_q[..., None]) * scale
+            dq_blk = dq_blk + jnp.einsum("bkgst,btkd->bskgd",
+                                         ds.astype(kblk.dtype), kblk)
+            dk_b = jnp.einsum("bkgst,bskgd->btkd", ds.astype(qblk.dtype), qblk)
+            dv_b = jnp.einsum("bkgst,bskgd->btkd", p.astype(doblk.dtype), doblk)
+            return dq_blk, (dk_b, dv_b, ik)
+
+        dq0 = jnp.zeros((B, bq, KV, G, hd), jnp.float32)
+        dq_blk, (dk_bs, dv_bs, _) = jax.lax.scan(
+            kv_step, dq0, (kb, vb, kpb, jnp.arange(nk)))
+        return (dk_acc + dk_bs, dv_acc + dv_bs), dq_blk
+
+    dk0 = jnp.zeros((nk, B, bk, KV, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, B, bk, KV, hd_v), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (dk0, dv0), (qb, qpb, dob, lseb, Db))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, nq * bq, KV, G, hd)[:, :Sq]
+    dq = dq.reshape(B, Sq, H, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(B, nk * bk, KV, hd)[:, :Sk].astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(B, nk * bk, KV, hd_v)[:, :Sk].astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)
+
+
+def self_attention(params, x, positions, cfg: ModelConfig, *, causal=True,
+                   window=None, attn_impl: str = "auto"):
+    """Full-sequence self-attention (train / prefill). x: (B,S,d)."""
+    S = x.shape[1]
+    q, k, v = _qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    pos1d = positions[0] if positions.ndim == 2 else positions
+    use_chunked = attn_impl == "chunked" or (attn_impl == "auto" and S > CHUNKED_ATTN_THRESHOLD)
+    if attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    elif use_chunked and cfg.attn_custom_vjp:
+        out = flash_mha(q, k, v, pos1d, pos1d, causal, window)
+    elif use_chunked:
+        out = chunked_attend(q, k, v, pos1d, pos1d, causal=causal, window=window,
+                             remat_inner=cfg.attn_remat_inner)
+    else:
+        bias = _mask_bias(pos1d, pos1d, causal, window)[None, None]
+        out = gqa_attend(q, k, v, bias)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def cross_attention(params, x, kv_cache_k, kv_cache_v, src_valid, cfg: ModelConfig):
+    """Decoder cross-attention over precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+    Sk = kv_cache_k.shape[1]
+    bias = jnp.where(src_valid[:, None, None, :], 0.0, NEG_INF).astype(jnp.float32)
+    out = gqa_attend(q, kv_cache_k, kv_cache_v, bias)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer for sliding-window; slot_positions track validity)
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_shape(cfg: ModelConfig, batch: int, cache_len: int):
+    """Physical cache length honours the sliding window if smaller."""
+    phys = cache_len if cfg.attention_window is None else min(cfg.attention_window, cache_len)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": (cfg.num_layers, batch, phys, KV, hd),
+        "v": (cfg.num_layers, batch, phys, KV, hd),
+        "slot_pos": (cfg.num_layers, phys),
+    }
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    shp = kv_cache_shape(cfg, batch, cache_len)
+    return {
+        "k": jnp.zeros(shp["k"], dtype),
+        "v": jnp.zeros(shp["v"], dtype),
+        "slot_pos": jnp.full(shp["slot_pos"], -1, jnp.int32),
+    }
+
+
+def decode_attention(params, x, layer_cache, pos, cfg: ModelConfig):
+    """Single-token decode. x: (B,1,d); layer_cache: dict(k,v,slot_pos) for
+    THIS layer (k/v: (B,P,KV,hd)); pos: scalar int32 absolute position.
+
+    Returns (out (B,1,d), updated layer_cache).
+    """
+    q, k, v = _qkv(params, x, cfg)
+    posb = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    P = layer_cache["k"].shape[1]
+    slot = jnp.mod(pos, P)
+    ck = jax.lax.dynamic_update_slice(layer_cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(layer_cache["v"], v, (0, slot, 0, 0))
+    spos = jax.lax.dynamic_update_slice(
+        layer_cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,)
+    )
+    window = cfg.attention_window
+    valid = spos >= 0
+    if window is not None:
+        valid &= spos > pos - window
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, None, None, :]
+    out = gqa_attend(q, ck, cv, bias)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, {"k": ck, "v": cv, "slot_pos": spos}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(d: int, f: int, gated: bool = True):
+    if gated:
+        return {
+            "w_gate": ArraySpec((d, f), ("embed", "mlp"), init="scaled"),
+            "w_up": ArraySpec((d, f), ("embed", "mlp"), init="scaled"),
+            "w_down": ArraySpec((f, d), ("mlp", "embed"), init="scaled"),
+        }
+    return {
+        "w_up": ArraySpec((d, f), ("embed", "mlp"), init="scaled"),
+        "b_up": ArraySpec((f,), ("mlp",), init="zeros"),
+        "w_down": ArraySpec((f, d), ("mlp", "embed"), init="scaled"),
+        "b_down": ArraySpec((d,), ("act_embed",), init="zeros"),
+    }
+
+
+def mlp_apply(params, x, gated: bool = True):
+    if gated:
+        g = jax.nn.silu(x @ params["w_gate"].astype(x.dtype))
+        u = x @ params["w_up"].astype(x.dtype)
+        return (g * u) @ params["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype) + params["b_up"].astype(x.dtype))
+    return h @ params["w_down"].astype(x.dtype) + params["b_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (group-limited one-hot dispatch, GShard/Switch style)
+# ---------------------------------------------------------------------------
+
+MOE_GROUP_SIZE = 256  # tokens per dispatch group; bounds one-hot memory
+
+
+def moe_spec(cfg: ModelConfig):
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_ff_expert
+    spec = {
+        "router": ArraySpec((d, m.num_experts), ("embed", "experts"), init="scaled"),
+        "w_gate": ArraySpec((m.num_experts, d, fe), ("experts", "embed", "mlp"), init="scaled"),
+        "w_up": ArraySpec((m.num_experts, d, fe), ("experts", "embed", "mlp"), init="scaled"),
+        "w_down": ArraySpec((m.num_experts, fe, d), ("experts", "mlp", "embed"), init="scaled"),
+    }
+    if m.num_shared:
+        spec["shared"] = mlp_spec(d, m.num_shared * fe, gated=True)
+    return spec
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """x: (B,S,d) -> (y (B,S,d), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    T = B * S
+    gs = min(MOE_GROUP_SIZE, T)
+    # pad T to a multiple of gs (padding tokens are zero => routed harmlessly)
+    xt = x.reshape(T, d)
+    pad = (-T) % gs
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    G = xt.shape[0] // gs
+    xg = xt.reshape(G, gs, d)
+    logits = jnp.einsum("gsd,de->gse", xg, params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (G,gs,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    cap = max(1, int(math.ceil(gs * K / E * m.capacity_factor)))
+
+    counts = jnp.zeros((G, E), jnp.int32)
+    dispatch = jnp.zeros((G, gs, E, cap), x.dtype)
+    combine = jnp.zeros((G, gs, E, cap), jnp.float32)
+    for kk in range(K):
+        idx = gate_idx[..., kk]  # (G,gs)
+        oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (G,gs,E)
+        pos_in_e = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]  # (G,gs,E)
+        mypos = jnp.take_along_axis(pos_in_e, idx[..., None], axis=-1)[..., 0]  # (G,gs)
+        keep = mypos < cap
+        pos_oh = jax.nn.one_hot(jnp.where(keep, mypos, cap), cap + 1, dtype=x.dtype)[..., :cap]
+        d_k = oh.astype(x.dtype)[..., None] * pos_oh[:, :, None, :]  # (G,gs,E,cap)
+        dispatch = dispatch + d_k
+        combine = combine + d_k.astype(jnp.float32) * gate_vals[..., kk][..., None, None]
+        counts = counts + jnp.sum(oh * keep[..., None].astype(jnp.int32), axis=1)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg, dispatch)  # (G,E,cap,d)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h * u, params["w_down"].astype(x.dtype))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+    y = y.reshape(-1, d)[:T].reshape(B, S, d)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    top1 = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32)
+    fe_frac = jnp.mean(top1, axis=(0, 1))
+    aux = E * jnp.sum(fe_frac * me) * m.router_aux_weight
+
+    if m.num_shared:
+        y = y + mlp_apply(params["shared"], x, gated=True)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg: ModelConfig):
+    a = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = a.nope_head_dim
+    return {
+        "wq_a": ArraySpec((d, a.q_lora_rank), ("embed", "lora"), init="scaled"),
+        "q_norm": norm_spec(a.q_lora_rank),
+        "wq_b": ArraySpec((a.q_lora_rank, H, qk + a.rope_head_dim),
+                          ("lora", "heads", "head_dim"), init="scaled"),
+        "wkv_a": ArraySpec((d, a.kv_lora_rank + a.rope_head_dim), ("embed", "lora"), init="scaled"),
+        "kv_norm": norm_spec(a.kv_lora_rank),
+        "wk_b": ArraySpec((a.kv_lora_rank, H, qk), ("lora", "heads", "head_dim"), init="scaled"),
+        "wv_b": ArraySpec((a.kv_lora_rank, H, a.v_head_dim),
+                          ("lora", "heads", "head_dim"), init="scaled"),
+        "wo": ArraySpec((H, a.v_head_dim, d), ("heads", "head_dim", "embed"), init="scaled"),
+    }
+
+
+def _mla_qkv_latent(params, x, cfg: ModelConfig):
+    a = cfg.mla
+    cq = rms_norm(x @ params["wq_a"].astype(x.dtype), params["q_norm"]["scale"], cfg.norm_eps)
+    q = jnp.einsum("bsl,lhk->bshk", cq, params["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., : a.nope_head_dim], q[..., a.nope_head_dim:]
+    ckv_full = x @ params["wkv_a"].astype(x.dtype)
+    c_kv = rms_norm(ckv_full[..., : a.kv_lora_rank], params["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = ckv_full[..., a.kv_lora_rank:][:, :, None, :]  # (B,S,1,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(params, x, positions, cfg: ModelConfig, *, window=None):
+    """Naive (materialized K/V) MLA for train/prefill."""
+    a = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_latent(params, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, params["wk_b"].astype(x.dtype))
+    v = jnp.einsum("bsl,lhk->bshk", c_kv, params["wv_b"].astype(x.dtype))
+    H = cfg.num_heads
+    k_rope_h = jnp.broadcast_to(k_rope, k_rope.shape[:2] + (H, a.rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    pos1d = positions[0] if positions.ndim == 2 else positions
+    S = x.shape[1]
+    if S > CHUNKED_ATTN_THRESHOLD and cfg.attn_custom_vjp:
+        out = flash_mha(q, k, v, pos1d, pos1d, True, window)  # MLA: hd_v != hd ok
+    elif S > CHUNKED_ATTN_THRESHOLD:
+        out = chunked_attend(q, k, v, pos1d, pos1d, causal=True, window=window,
+                             remat_inner=cfg.attn_remat_inner)
+    else:
+        bias = _mask_bias(pos1d, pos1d, True, window)[None, None]
+        out = gqa_attend(q, k, v, bias)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, cache_len: int):
+    a = cfg.mla
+    phys = cache_len if cfg.attention_window is None else min(cfg.attention_window, cache_len)
+    return {
+        "c_kv": (cfg.num_layers, batch, phys, a.kv_lora_rank),
+        "k_rope": (cfg.num_layers, batch, phys, a.rope_head_dim),
+        "slot_pos": (cfg.num_layers, phys),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    shp = mla_cache_shape(cfg, batch, cache_len)
+    return {
+        "c_kv": jnp.zeros(shp["c_kv"], dtype),
+        "k_rope": jnp.zeros(shp["k_rope"], dtype),
+        "slot_pos": jnp.full(shp["slot_pos"], -1, jnp.int32),
+    }
+
+
+def mla_decode_attention(params, x, layer_cache, pos, cfg: ModelConfig):
+    """Absorbed-matrix MLA decode: attends in the compressed latent space, so
+    the cache holds only (kv_lora + rope) per token (the paper's memory win).
+    """
+    a = cfg.mla
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv_latent(params, x, cfg)
+    posb = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
+    k_rope_new = apply_rope(k_rope_new, posb, cfg.rope_theta)
+    P = layer_cache["c_kv"].shape[1]
+    slot = jnp.mod(pos, P)
+    ckv = jax.lax.dynamic_update_slice(layer_cache["c_kv"], c_kv_new, (0, slot, 0))
+    krope = jax.lax.dynamic_update_slice(
+        layer_cache["k_rope"], k_rope_new[:, :, 0, :], (0, slot, 0)
+    )
+    spos = jax.lax.dynamic_update_slice(
+        layer_cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,)
+    )
+    # absorb W_UK into q: q_lat (B,1,H,kv_lora)
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, params["wk_b"].astype(x.dtype))
+    s_nope = jnp.einsum("bshl,btl->bhst", q_lat, ckv)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, krope)
+    scale = 1.0 / math.sqrt(a.nope_head_dim + a.rope_head_dim)
+    scores = (s_nope + s_rope).astype(jnp.float32) * scale
+    valid = spos >= 0
+    if cfg.attention_window is not None:
+        valid &= spos > pos - cfg.attention_window
+    scores = scores + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btl->bshl", probs, ckv)  # (B,1,H,kv_lora)
+    out = jnp.einsum("bshl,lhk->bshk", o_lat, params["wv_b"].astype(x.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    cache = {"c_kv": ckv, "k_rope": krope, "slot_pos": spos}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba's parallel heads)
+# ---------------------------------------------------------------------------
+
+
+def ssm_spec(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    dt_rank = s.dt_rank or max(1, d // 16)
+    return {
+        "w_in": ArraySpec((d, 2 * d_inner), ("embed", "mlp"), init="scaled"),
+        "conv_w": ArraySpec((s.conv_kernel, d_inner), ("conv", "mlp"), init="scaled"),
+        "conv_b": ArraySpec((d_inner,), ("mlp",), init="zeros"),
+        "w_x": ArraySpec((d_inner, dt_rank + 2 * s.state_dim), ("mlp", "lora"), init="scaled"),
+        "w_dt": ArraySpec((dt_rank, d_inner), ("lora", "mlp"), init="scaled"),
+        "b_dt": ArraySpec((d_inner,), ("mlp",), init="zeros"),
+        "A_log": ArraySpec((d_inner, s.state_dim), ("mlp", "ssm_state"), init="zeros"),
+        "D": ArraySpec((d_inner,), ("mlp",), init="ones"),
+        "w_out": ArraySpec((d_inner, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _ssm_inputs(params, x, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(1, cfg.d_model // 16)
+    xz = x @ params["w_in"].astype(x.dtype)
+    xs, z = xz[..., :d_inner], xz[..., d_inner:]
+    return xs, z, d_inner, dt_rank
+
+
+def _ssm_gates(params, xs_conv, cfg, dt_rank):
+    s = cfg.ssm
+    proj = xs_conv @ params["w_x"].astype(xs_conv.dtype)
+    dt_in = proj[..., :dt_rank]
+    Bmat = proj[..., dt_rank : dt_rank + s.state_dim]
+    Cmat = proj[..., dt_rank + s.state_dim :]
+    dt = jax.nn.softplus(dt_in @ params["w_dt"].astype(xs_conv.dtype)
+                         + params["b_dt"].astype(xs_conv.dtype))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (d_inner, N)
+    return dt, Bmat, Cmat, A
+
+
+def ssm_apply(params, x, cfg: ModelConfig, *, impl: str = "auto"):
+    """Full-sequence selective scan. x: (B,S,d) -> (B,S,d).
+
+    ``impl='xla'`` scans over time (memory-light, used for train/dry-run);
+    ``impl='pallas'`` calls the chunked Pallas ssm_scan kernel.
+    """
+    s = cfg.ssm
+    xs, z, d_inner, dt_rank = _ssm_inputs(params, x, cfg)
+    # causal depthwise conv
+    K = s.conv_kernel
+    xs_pad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    conv_w = params["conv_w"].astype(x.dtype)  # (K, d_inner)
+    xc = sum(xs_pad[:, i : i + xs.shape[1], :] * conv_w[i] for i in range(K))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(x.dtype))
+    dt, Bm, Cm, A = _ssm_gates(params, xc, cfg, dt_rank)
+
+    if impl == "pallas":
+        from repro.kernels.ssm_scan import ops as ssm_ops
+        y = ssm_ops.ssm_scan(xc, dt, Bm, Cm, A)
+    else:
+        def step(h, inp):
+            xc_t, dt_t, B_t, C_t = inp  # (B,d_inner),(B,d_inner),(B,N),(B,N)
+            dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)  # (B,d_inner,N)
+            dBx = (dt_t * xc_t)[..., None].astype(jnp.float32) * B_t[:, None, :]
+            h = dA * h + dBx
+            y_t = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+            return h, y_t
+
+        h0 = jnp.zeros((x.shape[0], d_inner, s.state_dim), jnp.float32)
+        xs_t = jnp.moveaxis(xc, 1, 0)
+        _, ys = jax.lax.scan(
+            step, h0, (xs_t, jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+        )
+        y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+    y = y + xc * params["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+def ssm_state_shape(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    return {
+        "h": (cfg.num_layers, batch, d_inner, s.state_dim),
+        "conv": (cfg.num_layers, batch, s.conv_kernel - 1, d_inner),
+    }
+
+
+def ssm_decode(params, x, state, cfg: ModelConfig):
+    """Single-step SSM decode. x: (B,1,d); state: dict(h (B,d_inner,N),
+    conv (B,K-1,d_inner)). O(1) per token — this is why hymba runs long_500k.
+    """
+    s = cfg.ssm
+    xs, z, d_inner, dt_rank = _ssm_inputs(params, x, cfg)
+    xs1 = xs[:, 0, :]  # (B, d_inner)
+    K = s.conv_kernel
+    hist = jnp.concatenate([state["conv"], xs1[:, None, :]], axis=1)  # (B,K,d_inner)
+    conv_w = params["conv_w"].astype(x.dtype)
+    xc = jnp.einsum("bkd,kd->bd", hist, conv_w) + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)[:, None, :]  # (B,1,d_inner)
+    dt, Bm, Cm, A = _ssm_gates(params, xc, cfg, dt_rank)
+    dA = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * A)
+    dBx = (dt[:, 0] * xc[:, 0])[..., None].astype(jnp.float32) * Bm[:, 0, None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = y + xc[:, 0] * params["D"].astype(x.dtype)
+    y = (y * jax.nn.silu(z[:, 0]))[:, None, :]
+    out = y @ params["w_out"].astype(x.dtype)
+    return out, {"h": h, "conv": hist[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM cells (mLSTM matrix memory + sLSTM scalar memory) [arXiv:2405.04517]
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    di = int(cfg.xlstm.proj_factor * d)
+    di = (di // H) * H
+    dh = di // H
+    return {
+        "w_up": ArraySpec((d, 2 * di), ("embed", "mlp"), init="scaled"),
+        "wq": ArraySpec((di, H, dh), ("mlp", "heads", "head_dim"), init="scaled"),
+        "wk": ArraySpec((di, H, dh), ("mlp", "heads", "head_dim"), init="scaled"),
+        "wv": ArraySpec((di, H, dh), ("mlp", "heads", "head_dim"), init="scaled"),
+        "w_if": ArraySpec((di, H, 2), ("mlp", "heads", None), init="scaled"),
+        "b_if": ArraySpec((H, 2), ("heads", None), init="zeros"),
+        "w_down": ArraySpec((di, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _mlstm_qkvif(params, xm, H, dh):
+    q = jnp.einsum("bsd,dhk->bshk", xm, params["wq"].astype(xm.dtype)) / math.sqrt(dh)
+    k = jnp.einsum("bsd,dhk->bshk", xm, params["wk"].astype(xm.dtype)) / math.sqrt(dh)
+    v = jnp.einsum("bsd,dhk->bshk", xm, params["wv"].astype(xm.dtype))
+    gif = jnp.einsum("bsd,dhg->bshg", xm, params["w_if"].astype(xm.dtype)) + params[
+        "b_if"
+    ].astype(xm.dtype)
+    i_pre = gif[..., 0].astype(jnp.float32)  # (B,S,H)
+    f_pre = gif[..., 1].astype(jnp.float32)
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_apply(params, x, cfg: ModelConfig):
+    """Full-sequence mLSTM (scan over time; stabilized exponential gating)."""
+    H = cfg.num_heads
+    di = params["w_down"].shape[0]
+    dh = di // H
+    up = x @ params["w_up"].astype(x.dtype)
+    xm, z = up[..., :di], up[..., di:]
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, xm, H, dh)
+
+    def step(carry, inp):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        q_t, k_t, v_t, i_t, f_t = inp
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)
+        ig = jnp.exp(i_t - m_new)
+        fg = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+        C = fg[..., None, None] * C + ig[..., None, None] * (
+            v_t[..., :, None].astype(jnp.float32) * k_t[..., None, :].astype(jnp.float32)
+        )
+        n = fg[..., None] * n + ig[..., None] * k_t.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t.astype(jnp.float32))
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t.astype(jnp.float32))), 1.0)
+        h_t = num / den[..., None]
+        return (C, n, m_new), h_t
+
+    B = x.shape[0]
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    seq = (
+        jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(i_pre, 1, 0), jnp.moveaxis(f_pre, 1, 0),
+    )
+    _, hs = jax.lax.scan(step, (C0, n0, m0), seq)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,H,dh)
+    h = h.reshape(x.shape[0], x.shape[1], di)
+    return (h * jax.nn.silu(z)) @ params["w_down"].astype(x.dtype)
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    di = int(cfg.xlstm.proj_factor * cfg.d_model)
+    di = (di // H) * H
+    dh = di // H
+    return {"C": (batch, H, dh, dh), "n": (batch, H, dh), "m": (batch, H)}
+
+
+def mlstm_decode(params, x, state, cfg: ModelConfig):
+    H = cfg.num_heads
+    di = params["w_down"].shape[0]
+    dh = di // H
+    up = x @ params["w_up"].astype(x.dtype)
+    xm, z = up[..., :di], up[..., di:]
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, xm, H, dh)
+    q_t, k_t, v_t = q[:, 0], k[:, 0], v[:, 0]
+    i_t, f_t = i_pre[:, 0], f_pre[:, 0]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)
+    ig = jnp.exp(i_t - m_new)
+    fg = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+    C = fg[..., None, None] * C + ig[..., None, None] * (
+        v_t[..., :, None].astype(jnp.float32) * k_t[..., None, :].astype(jnp.float32)
+    )
+    n = fg[..., None] * n + ig[..., None] * k_t.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C, q_t.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t.astype(jnp.float32))), 1.0)
+    h = (num / den[..., None]).astype(x.dtype).reshape(x.shape[0], 1, di)
+    out = (h * jax.nn.silu(z)) @ params["w_down"].astype(x.dtype)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def slstm_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    return {
+        # input projections for i,f,z,o gates
+        "w_gates": ArraySpec((d, H, 4 * dh), ("embed", "heads", "head_dim"), init="scaled"),
+        "b_gates": ArraySpec((H, 4 * dh), ("heads", "head_dim"), init="zeros"),
+        # recurrent (block-diagonal per head) projections
+        "r_gates": ArraySpec((H, dh, 4 * dh), ("heads", "head_dim", None), init="scaled"),
+        "w_down": ArraySpec((d, d), ("embed", "act_embed"), init="scaled"),
+    }
+
+
+def _slstm_step(params, carry, x_t, H, dh):
+    c, n, h, m = carry  # each (B,H,dh) except m (B,H,dh)
+    gx = jnp.einsum("bd,dhk->bhk", x_t, params["w_gates"]) + params["b_gates"]
+    gr = jnp.einsum("bhd,hdk->bhk", h, params["r_gates"])
+    g = (gx + gr).astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_pre) + m, i_pre)
+    ig = jnp.exp(i_pre - m_new)
+    fg = jnp.exp(jax.nn.log_sigmoid(f_pre) + m - m_new)
+    c = fg * c + ig * jnp.tanh(z_pre)
+    n = fg * n + ig
+    h_new = (jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)).astype(x_t.dtype)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_apply(params, x, cfg: ModelConfig):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    B = x.shape[0]
+    c0 = jnp.zeros((B, H, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    h0 = jnp.zeros((B, H, dh), x.dtype)
+    m0 = jnp.full((B, H, dh), -1e30, jnp.float32)
+    wp = {k: v.astype(x.dtype) if v.dtype != jnp.float32 else v for k, v in params.items()}
+
+    def step(carry, x_t):
+        return _slstm_step(wp, carry, x_t, H, dh)
+
+    _, hs = jax.lax.scan(step, (c0, n0, h0, m0), jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, x.shape[1], cfg.d_model)
+    return h @ params["w_down"].astype(x.dtype)
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    return {"c": (batch, H, dh), "n": (batch, H, dh), "h": (batch, H, dh), "m": (batch, H, dh)}
+
+
+def slstm_decode(params, x, state, cfg: ModelConfig):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    wp = {k: v.astype(x.dtype) if v.dtype != jnp.float32 else v for k, v in params.items()}
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_step(wp, carry, x[:, 0], H, dh)
+    out = h.reshape(x.shape[0], 1, cfg.d_model) @ params["w_down"].astype(x.dtype)
+    return out, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(cfg: ModelConfig):
+    # "embed_tbl" (not "embed"): the token-embedding gather interacts badly
+    # with SPMD when the feature dim is FSDP-sharded under a vmapped pod dim
+    # (§Perf B3), so the table's sharding is controllable independently.
+    return {"embedding": ArraySpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed_tbl"))}
+
+
+def embed_apply(params, tokens, dtype):
+    return params["embedding"].astype(dtype)[tokens]
+
+
+def head_spec(cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": ArraySpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="scaled")}
+
+
+def head_apply(params, embed_params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, embed_params["embedding"].astype(x.dtype))
+    return x @ params["w"].astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """logits: (B,S,V); labels: (B,S) int32; mask optional (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,92 @@
+"""Parameter specification system: one source of truth for shapes, logical
+sharding axes and initializers.
+
+Every model module builds a *spec tree* (nested dicts of :class:`ArraySpec`).
+From the same tree we derive:
+  * ``init_params``   — materialized parameter pytree,
+  * ``axes_tree``     — matching tree of logical-axis tuples (for sharding),
+  * ``abstract_params`` — ShapeDtypeStruct tree (for the dry-run: no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    shape: tuple
+    axes: tuple  # logical axis names; len(axes) == len(shape); None entries ok
+    init: str = "normal"  # normal | zeros | ones | scaled  (scaled = 1/sqrt(fan_in))
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ArraySpec)
+
+
+def _init_one(spec: ArraySpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (0.02 * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "scaled":
+        fan_in = spec.shape[0] if len(spec.shape) >= 1 else 1
+        if len(spec.shape) >= 2:
+            fan_in = int(np.prod(spec.shape[:-1]))
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(spec_tree, key):
+    """Materialize a parameter pytree from a spec tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def axes_tree(spec_tree):
+    """Tree of logical-axis tuples, matching init_params' structure."""
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree — used by the dry-run, never allocated."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+def stack_layers(spec_tree, num_layers: int):
+    """Prepend a scanned ``layers`` axis to every spec in the tree.
+
+    Models scan over the layer stack (keeps HLO compact for 60-88 layer
+    configs), so per-layer params carry a leading ``layers`` dimension.
+    """
+    return jax.tree_util.tree_map(
+        lambda s: ArraySpec(
+            shape=(num_layers,) + s.shape,
+            axes=("layers",) + s.axes,
+            init=s.init,
+            dtype=s.dtype,
+        ),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def spec_num_params(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)

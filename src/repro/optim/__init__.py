@@ -1,0 +1,2 @@
+from repro.optim.adam import Adam, Sgd
+from repro.optim.schedules import one_cycle, cosine_decay, constant

@@ -1,0 +1,37 @@
+"""Learning-rate schedules. The paper trains with Adam and "the cycle learning
+rate policy" (super-convergence, Smith & Topin [22]) — ``one_cycle`` here."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + (lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def one_cycle(max_lr: float, total_steps: int, pct_start: float = 0.3,
+              div_factor: float = 25.0, final_div: float = 1e4):
+    """Smith & Topin's 1cycle: linear ramp to max_lr, cosine anneal down."""
+    up = max(int(total_steps * pct_start), 1)
+    lr0 = max_lr / div_factor
+    lr_end = max_lr / final_div
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        ramp = lr0 + (max_lr - lr0) * step / up
+        t = jnp.clip((step - up) / jnp.maximum(total_steps - up, 1), 0.0, 1.0)
+        down = lr_end + (max_lr - lr_end) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < up, ramp, down)
+
+    return f

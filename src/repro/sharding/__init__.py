@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    make_rules,
+    logical_to_spec,
+    logical_to_sharding,
+    TRAIN_RULES,
+    SERVE_RULES,
+)

@@ -1,0 +1,152 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Parameters are annotated with *logical* axes ("embed", "heads", "mlp",
+"experts", "vocab", ...). A :class:`ShardingRules` table maps each logical
+axis to a mesh axis (or None = replicated). Rules are validated against the
+actual dimension sizes: a logical axis whose size is not divisible by its mesh
+axis is silently dropped to replicated (recorded in ``dropped``), which is how
+e.g. qwen2-1.5b's 12 heads stay replicated on a 16-way model axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
+
+# Default rule tables. "fsdp_axis" below refers to whatever mesh axes shard
+# the batch (("pod","data") multi-pod, ("data",) single-pod).
+
+TRAIN_RULES = {
+    # weight axes
+    "embed": "data",      # FSDP: shard the contracting dim over the data axis
+    "embed_tbl": "data",  # token-embedding feature dim (separable; §Perf B3)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "head_dim": None,
+    "layers": None,       # scanned axis — never sharded
+    "ssm_state": None,
+    "conv": None,
+    "lora": None,
+    # activation axes
+    "batch": "data",
+    "seq": None,
+    "act_embed": None,
+}
+
+SERVE_RULES = {
+    "embed": None,        # no FSDP at serve time: weights live on the model axis
+    "embed_tbl": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "head_dim": None,
+    "layers": None,
+    "ssm_state": None,
+    "conv": None,
+    "lora": None,
+    "batch": "data",
+    "seq": None,
+    "act_embed": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    table: dict
+    mesh: Mesh
+    # logical axes that were requested sharded but dropped for divisibility
+    dropped: set = dataclasses.field(default_factory=set)
+
+    def mesh_axes(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        ax = self.table.get(logical)
+        return ax
+
+    def axis_size(self, mesh_axis) -> int:
+        if mesh_axis is None:
+            return 1
+        if isinstance(mesh_axis, tuple):
+            s = 1
+            for a in mesh_axis:
+                s *= self.mesh.shape[a]
+            return s
+        return self.mesh.shape[mesh_axis]
+
+
+def make_rules(mesh: Mesh, mode: str = "train", overrides: dict | None = None) -> ShardingRules:
+    base = dict(TRAIN_RULES if mode == "train" else SERVE_RULES)
+    # batch shards over every data-like axis present in the mesh.
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    base["batch"] = data_axes if data_axes else None
+    if mode == "train":
+        base["embed"] = "data" if "data" in mesh.shape else None
+    if "model" not in mesh.shape:
+        for k, v in list(base.items()):
+            if v == "model":
+                base[k] = None
+    if overrides:
+        base.update(overrides)
+    return ShardingRules(table=base, mesh=mesh)
+
+
+def _spec_for_axes(axes: tuple, rules: ShardingRules, dim_sizes: tuple | None = None) -> P:
+    """Build a PartitionSpec, dropping non-divisible or duplicate mesh axes."""
+    used = set()
+    parts = []
+    for i, logical in enumerate(axes):
+        mesh_ax = rules.mesh_axes(logical)
+        if mesh_ax is None:
+            parts.append(None)
+            continue
+        flat = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        # a mesh axis may appear only once in a PartitionSpec
+        if any(a in used for a in flat):
+            parts.append(None)
+            continue
+        size = rules.axis_size(mesh_ax)
+        if dim_sizes is not None and dim_sizes[i] % size != 0:
+            rules.dropped.add((logical, dim_sizes[i], size))
+            parts.append(None)
+            continue
+        used.update(flat)
+        parts.append(mesh_ax)
+    # trim trailing Nones for tidiness
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def logical_to_spec(axes_tree, rules: ShardingRules, shapes_tree=None):
+    """Tree of logical-axis tuples -> tree of PartitionSpec."""
+    is_axes = lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+    if shapes_tree is None:
+        return jax.tree_util.tree_map(
+            lambda ax: _spec_for_axes(ax, rules), axes_tree, is_leaf=is_axes
+        )
+    return jax.tree_util.tree_map(
+        lambda ax, shp: _spec_for_axes(ax, rules, tuple(shp)),
+        axes_tree,
+        shapes_tree,
+        is_leaf=is_axes,
+    )
+
+
+def logical_to_sharding(axes_tree, rules: ShardingRules, shapes_tree=None):
+    """Tree of logical-axis tuples -> tree of NamedSharding."""
+    specs = logical_to_spec(axes_tree, rules, shapes_tree)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

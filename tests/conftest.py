@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single host CPU device (the dry-run, and ONLY the dry-run,
+# uses 512 placeholder devices via its own XLA_FLAGS).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

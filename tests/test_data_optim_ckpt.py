@@ -1,0 +1,175 @@
+"""Data pipeline, optimizer, schedule and checkpoint tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import ev_synthetic, nn5_synthetic, ett_like
+from repro.data.windowing import clean_clients, client_datasets, make_windows, split_windows
+from repro.data.clustering import dtw_distance_matrix, kmedoids, cluster_clients
+from repro.optim import Adam, Sgd, one_cycle, cosine_decay
+from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
+
+
+# ---- data -------------------------------------------------------------------
+
+
+def test_ev_synthetic_properties():
+    s = ev_synthetic(seed=0)
+    assert s.shape == (58, 420)
+    assert (s >= 0).all()
+    assert (s == 0).mean() > 0.05  # zero-inflation / missing spans
+    # non-homogeneity: per-station scales differ widely
+    means = s.mean(axis=1)
+    assert means.max() > 3 * means.min()
+
+
+def test_nn5_weekly_seasonality():
+    s = nn5_synthetic(seed=0, num_clients=10, num_days=350)
+    z = (s - s.mean(1, keepdims=True)) / s.std(1, keepdims=True)
+    # autocorrelation at lag 7 should be strong and larger than lag 3
+    ac7 = np.mean([np.corrcoef(z[i, :-7], z[i, 7:])[0, 1] for i in range(10)])
+    ac3 = np.mean([np.corrcoef(z[i, :-3], z[i, 3:])[0, 1] for i in range(10)])
+    assert ac7 > 0.5 and ac7 > ac3 + 0.2
+
+
+def test_make_windows_shapes_and_content():
+    s = np.arange(40, dtype=np.float32)[None, :].repeat(3, 0)
+    w = make_windows(s, look_back=8, horizon=2)
+    assert w.shape == (3, 31, 10)
+    np.testing.assert_allclose(w[0, 0], np.arange(10))
+    np.testing.assert_allclose(w[0, 5], np.arange(5, 15))
+
+
+def test_split_is_chronological():
+    s = np.arange(100, dtype=np.float32)[None, :]
+    w = make_windows(s, 8, 2)
+    tr, va, te = split_windows(w)
+    assert tr[0, -1, -1] <= va[0, 0, 0] + 10  # windows overlap by <= L+T
+    assert tr.shape[1] > te.shape[1] > 0
+    # no train window extends past the first val window start
+    assert tr[0, -1, 0] < va[0, 0, 0] + 1
+
+
+def test_clean_clients_drops_dead():
+    s = np.abs(np.random.default_rng(0).normal(5, 1, size=(4, 100))).astype(np.float32)
+    s[1, 60:] = 0.0  # station died
+    s[2, :] = 0.0    # never active
+    out, kept = clean_clients(s)
+    assert 1 not in kept and 2 not in kept and 0 in kept and 3 in kept
+
+
+def test_client_datasets_pipeline():
+    s = ev_synthetic(seed=1)
+    tr, va, te, info = client_datasets(s, look_back=32, horizon=2)
+    assert tr.shape[0] == va.shape[0] == te.shape[0]
+    assert tr.shape[2] == 34
+    assert np.isfinite(tr).all()
+
+
+def test_dtw_properties():
+    key = jax.random.PRNGKey(0)
+    s = jax.random.normal(key, (5, 40))
+    d = np.asarray(dtw_distance_matrix(s))
+    assert np.allclose(d, d.T)
+    assert np.allclose(np.diag(d), 0.0, atol=1e-5)
+    assert (d[~np.eye(5, dtype=bool)] > 0).all()
+    # identical series -> zero distance
+    s2 = jnp.concatenate([s[:1], s[:1]], axis=0)
+    d2 = np.asarray(dtw_distance_matrix(s2))
+    assert d2[0, 1] < 1e-4
+
+
+def test_dtw_warping_invariance():
+    """DTW of a series vs its time-warped self << euclidean-style mismatch."""
+    t = np.linspace(0, 4 * np.pi, 60)
+    a = np.sin(t)
+    b = np.sin(t * 1.08)  # slightly warped
+    c = np.cos(t)         # out of phase
+    s = jnp.asarray(np.stack([a, b, c]).astype(np.float32))
+    d = np.asarray(dtw_distance_matrix(s))
+    assert d[0, 1] < d[0, 2]
+
+
+def test_kmedoids_separates_obvious_clusters():
+    rng = np.random.default_rng(0)
+    g1 = rng.normal(0, 0.1, size=(5, 30)) + np.sin(np.linspace(0, 6, 30))
+    g2 = rng.normal(0, 0.1, size=(5, 30)) + np.cos(np.linspace(0, 6, 30)) * 3
+    s = np.concatenate([g1, g2]).astype(np.float32)
+    d = np.asarray(dtw_distance_matrix(jnp.asarray(s)))
+    labels, med = kmedoids(d, 2, seed=0)
+    assert len(set(labels[:5])) == 1 and len(set(labels[5:])) == 1
+    assert labels[0] != labels[5]
+
+
+# ---- optim ------------------------------------------------------------------
+
+
+def test_adam_converges_quadratic():
+    opt = Adam(lr=lambda t: 0.1)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum((p["x"] - jnp.array([1.0, 2.0])) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(params, g, state)
+    assert float(loss(params)) < 1e-3
+
+
+def test_sgd_momentum():
+    opt = Sgd(lr=lambda t: 0.05, momentum=0.9)
+    params = {"x": jnp.array([4.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(params, g, state)
+    assert float(loss(params)) < 1e-3
+
+
+def test_one_cycle_shape():
+    f = one_cycle(1.0, 100, pct_start=0.3)
+    lrs = [float(f(s)) for s in range(101)]
+    peak = int(np.argmax(lrs))
+    assert 25 <= peak <= 35
+    assert lrs[0] < 0.1 and lrs[-1] < 0.01
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_cosine_decay_monotone_after_warmup():
+    f = cosine_decay(1.0, 100, warmup=10)
+    lrs = [float(f(s)) for s in range(100)]
+    assert lrs[9] <= 1.0 + 1e-6
+    assert all(lrs[i] >= lrs[i + 1] - 1e-6 for i in range(12, 98))
+
+
+def test_adam_bf16_moments():
+    opt = Adam(lr=lambda t: 0.1, moment_dtype="bfloat16")
+    params = {"x": jnp.ones((4,))}
+    state = opt.init(params)
+    assert state["m"]["x"].dtype == jnp.bfloat16
+    g = {"x": jnp.ones((4,))}
+    params2, state2 = opt.update(params, g, state)
+    assert params2["x"].dtype == params["x"].dtype
+    assert state2["v"]["x"].dtype == jnp.bfloat16
+
+
+# ---- checkpoint ---------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.array(3, jnp.int32)}}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, tree, extra={"note": "hi"})
+    save_checkpoint(d, 12, tree)
+    assert latest_step(d) == 12
+    out, extra = load_checkpoint(d, tree, step=7)
+    assert extra["note"] == "hi"
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

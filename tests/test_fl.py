@@ -1,0 +1,120 @@
+"""Tests for the FL policies (Online-Fed / PSO-Fed / PSGF-Fed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import forecast as F
+from repro.core.fl import masks as M
+from repro.core.fl.strategies import FLConfig, fl_round, init_fl_state
+from repro.core.fl.simulator import evaluate_rmse, run_fl
+from repro.data.synthetic import nn5_synthetic
+from repro.data.windowing import client_datasets
+
+TINY = dict(look_back=32, horizon=2, d_model=16, num_heads=2, d_ff=32,
+            patch_len=8, stride=4)
+
+
+def _tiny_setup(policy="psgf", num_clients=6, **fl_kw):
+    model_cfg = F.logtst_config(**TINY)
+    fl_cfg = FLConfig(policy=policy, num_clients=num_clients, local_steps=2,
+                      batch_size=8, **fl_kw)
+    series = nn5_synthetic(seed=0, num_clients=num_clients, num_days=200)
+    tr, va, te, _ = client_datasets(series, 32, 2)
+    return model_cfg, fl_cfg, jnp.asarray(tr), jnp.asarray(te)
+
+
+# ---- masks -----------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(10, 5000), k=st.integers(1, 9), seed=st.integers(0, 999))
+def test_exact_k_mask(dim, k, seed):
+    k = min(k, dim)
+    m = M.exact_k_mask(jax.random.PRNGKey(seed), dim, k)
+    assert int(m.sum()) == k
+
+
+@settings(max_examples=10, deadline=None)
+@given(ratio=st.floats(0.05, 0.95), seed=st.integers(0, 999))
+def test_bernoulli_mask_density(ratio, seed):
+    m = M.bernoulli_mask(jax.random.PRNGKey(seed), 20000, ratio)
+    assert abs(float(m.mean()) - ratio) < 0.03
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 50), ratio=st.floats(0.1, 1.0), seed=st.integers(0, 999))
+def test_select_clients_exact(k, ratio, seed):
+    sel = M.select_clients(jax.random.PRNGKey(seed), k, ratio)
+    assert int(sel.sum()) == max(1, int(round(k * ratio)))
+
+
+# ---- round mechanics -------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["online", "pso", "psgf"])
+def test_round_runs_and_counts_comm(policy):
+    model_cfg, fl_cfg, tr, te = _tiny_setup(policy)
+    state, meta = init_fl_state(model_cfg, fl_cfg, jax.random.PRNGKey(0))
+    D = state["w_global"].shape[0]
+    s1, m1 = fl_round(state, tr, jax.random.PRNGKey(1), model_cfg, fl_cfg, meta)
+    s2, m2 = fl_round(s1, tr, jax.random.PRNGKey(2), model_cfg, fl_cfg, meta)
+    assert float(m2["comm_total"]) > float(m1["comm_total"]) > 0
+    assert np.isfinite(float(m1["train_loss"]))
+    C = max(1, round(fl_cfg.num_clients * fl_cfg.select_ratio))
+    if policy == "online":
+        per_round = 2 * C * D  # full down + up for selected
+        np.testing.assert_allclose(float(m1["comm_total"]), per_round, rtol=1e-6)
+    else:
+        assert float(m1["comm_total"]) < 2 * C * D  # strictly less than Online
+
+
+def test_psgf_comm_below_pso_above_forward_only():
+    """Per-round communication ordering: Online > PSGF(s,f) > PSO-down-only
+    component relations from the mask densities."""
+    model_cfg, fl_cfg_pso, tr, te = _tiny_setup("pso", share_ratio=0.5)
+    _, fl_cfg_psgf, _, _ = _tiny_setup("psgf", share_ratio=0.5, forward_ratio=0.2)
+    _, fl_cfg_onl, _, _ = _tiny_setup("online")
+    outs = {}
+    for name, cfg in [("pso", fl_cfg_pso), ("psgf", fl_cfg_psgf), ("online", fl_cfg_onl)]:
+        state, meta = init_fl_state(model_cfg, cfg, jax.random.PRNGKey(0))
+        _, m = fl_round(state, tr, jax.random.PRNGKey(7), model_cfg, cfg, meta)
+        outs[name] = float(m["comm_total"])
+    assert outs["online"] > outs["psgf"] > outs["pso"]  # psgf adds forwarding
+
+
+def test_online_unselected_clients_idle():
+    model_cfg, fl_cfg, tr, te = _tiny_setup("online", num_clients=6)
+    state, meta = init_fl_state(model_cfg, fl_cfg, jax.random.PRNGKey(0))
+    before = np.asarray(state["w_clients"])
+    s1, m1 = fl_round(state, tr, jax.random.PRNGKey(3), model_cfg, fl_cfg, meta)
+    after = np.asarray(s1["w_clients"])
+    changed = np.any(np.abs(after - before) > 0, axis=1)
+    assert changed.sum() == int(m1["num_selected"])  # only selected moved
+
+
+def test_psgf_all_clients_train():
+    """PSGF's point: every client updates every round (eq. 6)."""
+    model_cfg, fl_cfg, tr, te = _tiny_setup("psgf", num_clients=6)
+    state, meta = init_fl_state(model_cfg, fl_cfg, jax.random.PRNGKey(0))
+    before = np.asarray(state["w_clients"])
+    s1, _ = fl_round(state, tr, jax.random.PRNGKey(3), model_cfg, fl_cfg, meta)
+    after = np.asarray(s1["w_clients"])
+    changed = np.any(np.abs(after - before) > 0, axis=1)
+    assert changed.all()
+
+
+def test_fl_training_converges():
+    model_cfg, fl_cfg, tr, te = _tiny_setup("psgf")
+    hist = run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                  max_rounds=30, patience=30, eval_every=30)
+    assert hist["train_loss"][-1] < hist["train_loss"][0]
+    assert np.isfinite(hist["final_rmse"])
+
+
+def test_evaluate_rmse_sane():
+    model_cfg, fl_cfg, tr, te = _tiny_setup("psgf")
+    state, meta = init_fl_state(model_cfg, fl_cfg, jax.random.PRNGKey(0))
+    r = evaluate_rmse(model_cfg, state["w_global"], meta, te)
+    assert np.isfinite(r) and r > 0

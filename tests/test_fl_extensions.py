@@ -1,0 +1,68 @@
+"""Beyond-paper FL extensions: magnitude-based (top-k) PSGF masks and
+quantized (bf16) communication."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import forecast as F
+from repro.core.fl.strategies import FLConfig, fl_round, init_fl_state
+from repro.core.fl.simulator import run_fl
+from repro.data.synthetic import nn5_synthetic
+from repro.data.windowing import client_datasets
+
+TINY = dict(look_back=32, horizon=2, d_model=16, num_heads=2, d_ff=32,
+            patch_len=8, stride=4)
+
+
+def _setup(policy, **kw):
+    model_cfg = F.logtst_config(**TINY)
+    fl_cfg = FLConfig(policy=policy, num_clients=6, local_steps=2,
+                      batch_size=8, **kw)
+    series = nn5_synthetic(seed=0, num_clients=6, num_days=200)
+    tr, va, te, _ = client_datasets(series, 32, 2)
+    return model_cfg, fl_cfg, jnp.asarray(tr), jnp.asarray(te)
+
+
+def test_psgf_topk_round_runs_and_comm_matches_ratio():
+    model_cfg, fl_cfg, tr, te = _setup("psgf_topk", share_ratio=0.3,
+                                       forward_ratio=0.1)
+    state, meta = init_fl_state(model_cfg, fl_cfg, jax.random.PRNGKey(0))
+    D = state["w_global"].shape[0]
+    K = fl_cfg.num_clients
+    s1, m1 = fl_round(state, tr, jax.random.PRNGKey(1), model_cfg, fl_cfg, meta)
+    # round 1 down: selected get ~0.3D, unselected ~0.1D; up: selected ~0.3D
+    C = max(1, round(K * 0.5))
+    expect = C * 0.3 * D + (K - C) * 0.1 * D + C * 0.3 * D
+    got = float(m1["comm_total"])
+    assert abs(got - expect) / expect < 0.1, (got, expect)
+    assert np.isfinite(float(m1["train_loss"]))
+
+
+def test_psgf_topk_converges():
+    model_cfg, fl_cfg, tr, te = _setup("psgf_topk")
+    hist = run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                  max_rounds=25, patience=25, eval_every=25)
+    assert hist["train_loss"][-1] < hist["train_loss"][0]
+    assert np.isfinite(hist["final_rmse"])
+
+
+def test_quantized_comm_halves_bytes():
+    model_cfg, cfg32, tr, te = _setup("psgf", comm_bits=32)
+    _, cfg16, _, _ = _setup("psgf", comm_bits=16)
+    out = {}
+    for name, cfg in [("b32", cfg32), ("b16", cfg16)]:
+        state, meta = init_fl_state(model_cfg, cfg, jax.random.PRNGKey(0))
+        _, m = fl_round(state, tr, jax.random.PRNGKey(1), model_cfg, cfg, meta)
+        out[name] = (float(m["comm_total"]), float(m["comm_bytes"]))
+    # same parameter counts, half the bytes
+    assert abs(out["b32"][0] - out["b16"][0]) / out["b32"][0] < 0.05
+    assert abs(out["b16"][1] - out["b16"][0] * 2) < 1e-3
+    assert abs(out["b32"][1] - out["b32"][0] * 4) < 1e-3
+
+
+def test_quantized_comm_still_trains():
+    model_cfg, fl_cfg, tr, te = _setup("psgf", comm_bits=16)
+    hist = run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                  max_rounds=20, patience=20, eval_every=20)
+    assert hist["train_loss"][-1] < hist["train_loss"][0]

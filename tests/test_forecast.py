@@ -1,0 +1,108 @@
+"""Tests for the paper's forecasting models (LoGTST / PatchTST / MetaFormer)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import forecast as F
+
+
+def test_num_tokens():
+    cfg = F.logtst_config(look_back=128, patch_len=16, stride=8)
+    assert cfg.num_tokens == 15
+    cfg = F.patchtst_config(look_back=512, patch_len=16, stride=8)
+    assert cfg.num_tokens == 63
+
+
+def test_param_count_claim():
+    """Paper Table I: LoGTST ~5.39e5 params, ~45% of PatchTST/64 (1.19e6),
+    ~58% of PatchTST/42 (9.21e5). Our construction reproduces the ratios."""
+    lg = F.num_params(F.logtst_config(look_back=128, horizon=96))
+    p64 = F.num_params(F.patchtst_config(look_back=512, horizon=96))
+    p42 = F.num_params(F.patchtst_config(look_back=336, horizon=96))
+    assert 4.0e5 < lg < 7.0e5, lg
+    assert 1.0e6 < p64 < 1.4e6, p64
+    ratio64 = lg / p64
+    ratio42 = lg / p42
+    assert 0.35 < ratio64 < 0.60, (lg, p64, ratio64)
+    assert 0.45 < ratio42 < 0.75, (lg, p42, ratio42)
+
+
+def test_forward_shapes(rng_key):
+    cfg = F.logtst_config(look_back=128, horizon=4)
+    params = F.init_params(cfg, rng_key)
+    x = jax.random.normal(rng_key, (8, 128))
+    y = F.forward(cfg, params, x)
+    assert y.shape == (8, 4)
+    assert np.all(np.isfinite(np.asarray(y)))
+    xm = jax.random.normal(rng_key, (3, 7, 128))
+    ym = F.forward_multivariate(cfg, params, xm)
+    assert ym.shape == (3, 7, 4)
+
+
+@pytest.mark.parametrize("mk", ["logtst", "patchtst", "mlpformer", "idformer"])
+def test_all_variants_forward(rng_key, mk):
+    cfg = getattr(F, f"{mk}_config")(look_back=64, horizon=2)
+    params = F.init_params(cfg, rng_key)
+    x = jax.random.normal(rng_key, (4, 64))
+    y = F.forward(cfg, params, x)
+    assert y.shape == (4, 2) and np.all(np.isfinite(np.asarray(y)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(mean=st.floats(-100, 100), scale=st.floats(0.1, 50),
+       seed=st.integers(0, 2**30))
+def test_revin_invertibility(mean, scale, seed):
+    """Property (paper §II.B): RevIN 'symmetrically removes and restores the
+    statistical information of a time-series instance'."""
+    key = jax.random.PRNGKey(seed)
+    x = mean + scale * jax.random.normal(key, (4, 64))
+    params = {"affine_w": jnp.ones((1,)), "affine_b": jnp.zeros((1,))}
+    y, stats = F.revin_norm(params, x)
+    xr = F.revin_denorm(params, y, stats)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x), rtol=1e-4, atol=1e-3)
+    # normalized stats
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-3)
+
+
+def test_revin_scale_invariance(rng_key):
+    """Predictions rescale with the input when affine params are identity."""
+    cfg = F.logtst_config(look_back=64, horizon=2)
+    params = F.init_params(cfg, rng_key)
+    x = jax.random.normal(rng_key, (4, 64))
+    y1 = F.forward(cfg, params, x)
+    y2 = F.forward(cfg, params, x * 10.0 + 5.0)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1 * 10.0 + 5.0),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_training_reduces_loss(rng_key):
+    cfg = F.logtst_config(look_back=64, horizon=2, d_model=32, num_heads=4, d_ff=64)
+    params = F.init_params(cfg, rng_key)
+    t = jnp.arange(500, dtype=jnp.float32)
+    series = jnp.sin(2 * jnp.pi * t / 7) + 0.05 * jax.random.normal(rng_key, (500,))
+    idx = jnp.arange(64 + 2)[None, :] + jnp.arange(400)[:, None]
+    wins = series[idx]
+    x, y = wins[:, :64], wins[:, 64:]
+
+    loss_fn = lambda p: F.mse_loss(cfg, p, x, y)
+    l0 = float(loss_fn(params))
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    for _ in range(60):
+        l, g = grad_fn(params)
+        params = jax.tree_util.tree_map(lambda p, gg: p - 0.01 * gg, params, g)
+    assert float(l) < 0.5 * l0, (l0, float(l))
+
+
+def test_tokenize_matches_conv(rng_key):
+    """Tokenization == 1-D conv with kernel P, stride S (paper §II.B)."""
+    cfg = F.logtst_config(look_back=64, patch_len=16, stride=8)
+    params = F.init_params(cfg, rng_key)
+    x = jax.random.normal(rng_key, (2, 64))
+    tok = F.tokenize(params["tokenize"], x, cfg) - params["tokenize"]["pos"]
+    # manual conv
+    for i in range(cfg.num_tokens):
+        patch = x[:, i * 8 : i * 8 + 16]
+        expect = patch @ params["tokenize"]["w"] + params["tokenize"]["b"]
+        np.testing.assert_allclose(np.asarray(tok[:, i]), np.asarray(expect), rtol=1e-5)

@@ -1,0 +1,171 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref.py oracle
+(the container is CPU-only; interpret mode executes kernel bodies in Python).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.psgf_mix.ops import psgf_mix
+from repro.kernels.psgf_mix.ref import psgf_mix_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+# ---------------- flash_attention ----------------
+
+FA_CASES = [
+    # B, Sq, Skv, H, KV, hd, causal, window, dtype
+    (2, 256, 256, 4, 2, 64, True, None, jnp.float32),
+    (1, 200, 200, 4, 4, 128, True, 64, jnp.float32),
+    (2, 128, 384, 8, 2, 64, False, None, jnp.float32),
+    (1, 256, 256, 2, 1, 128, True, None, jnp.bfloat16),
+    (1, 100, 100, 6, 3, 32, True, 17, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_vs_ref(case, rng_key):
+    B, Sq, Skv, H, KV, hd, causal, window, dtype = case
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=128, block_k=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_size_invariance(rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    o1 = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    o2 = flash_attention(q, k, v, block_q=256, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_flash_attention_causality(rng_key):
+    """Perturbing future keys must not change earlier outputs."""
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    o1 = flash_attention(q, k, v, causal=True, interpret=True)
+    k2 = k.at[:, 64:].set(9.0)
+    v2 = v.at[:, 64:].set(-9.0)
+    o2 = flash_attention(q, k2, v2, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1[:, :64]), np.asarray(o2[:, :64]),
+                               atol=1e-6)
+    assert not np.allclose(np.asarray(o1[:, 64:]), np.asarray(o2[:, 64:]))
+
+
+# ---------------- psgf_mix ----------------
+
+
+@pytest.mark.parametrize("D", [64, 1000, 4096, 539_000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_psgf_mix_vs_ref(D, dtype, rng_key):
+    ks = jax.random.split(rng_key, 3)
+    wg = jax.random.normal(ks[0], (D,)).astype(dtype)
+    wl = jax.random.normal(ks[1], (D,)).astype(dtype)
+    m = jax.random.uniform(ks[2], (D,)) < 0.3
+    out, cnt = psgf_mix(wg, wl, m, interpret=True)
+    ref, rcnt = psgf_mix_ref(wg, wl, m)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=1e-6)
+    assert float(cnt) == float(rcnt)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), ratio=st.floats(0.0, 1.0))
+def test_psgf_mix_properties(seed, ratio):
+    """mask=1 -> global; mask=0 -> local; count == mask sum (eq. 4/6)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    D = 2000
+    wg = jax.random.normal(ks[0], (D,))
+    wl = jax.random.normal(ks[1], (D,))
+    m = jax.random.uniform(ks[2], (D,)) < ratio
+    out, cnt = psgf_mix(wg, wl, m, interpret=True)
+    out = np.asarray(out)
+    mn = np.asarray(m)
+    np.testing.assert_allclose(out[mn], np.asarray(wg)[mn], atol=1e-7)
+    np.testing.assert_allclose(out[~mn], np.asarray(wl)[~mn], atol=1e-7)
+    assert float(cnt) == mn.sum()
+
+
+# ---------------- ssm_scan ----------------
+
+SSM_CASES = [
+    (2, 64, 128, 16, jnp.float32),
+    (1, 200, 300, 8, jnp.float32),
+    (3, 128, 256, 16, jnp.bfloat16),
+    (1, 37, 64, 4, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", SSM_CASES)
+def test_ssm_scan_vs_ref(case, rng_key):
+    B, S, D, N, dtype = case
+    ks = jax.random.split(rng_key, 5)
+    x = jax.random.normal(ks[0], (B, S, D)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D))).astype(dtype)
+    Bm = jax.random.normal(ks[2], (B, S, N)).astype(dtype)
+    Cm = jax.random.normal(ks[3], (B, S, N)).astype(dtype)
+    A = -jnp.exp(0.1 * jax.random.normal(ks[4], (D, N)))
+    y = ssm_scan(x, dt, Bm, Cm, A, chunk=32, d_block=128, interpret=True)
+    yr = ssm_scan_ref(x, dt, Bm, Cm, A)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+
+
+def test_ssm_scan_chunk_invariance(rng_key):
+    ks = jax.random.split(rng_key, 5)
+    B, S, D, N = 1, 96, 128, 8
+    x = jax.random.normal(ks[0], (B, S, D))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D)))
+    Bm = jax.random.normal(ks[2], (B, S, N))
+    Cm = jax.random.normal(ks[3], (B, S, N))
+    A = -jnp.exp(0.1 * jax.random.normal(ks[4], (D, N)))
+    y1 = ssm_scan(x, dt, Bm, Cm, A, chunk=16, d_block=64, interpret=True)
+    y2 = ssm_scan(x, dt, Bm, Cm, A, chunk=96, d_block=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_model_ssm_pallas_path_matches_xla(rng_key):
+    """hymba's ssm_apply(impl='pallas') == impl='xla' (end-to-end wiring)."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import layers as L
+    from repro.models.spec import init_params as spec_init
+
+    cfg = dataclasses.replace(get_config("hymba-1.5b").reduced(), dtype="float32")
+    p = spec_init(L.ssm_spec(cfg), rng_key)
+    x = 0.1 * jax.random.normal(rng_key, (2, 48, cfg.d_model))
+    # interpret mode flows through ops.ssm_scan's default (interpret=False
+    # fails on CPU), so call the xla path and the kernel path manually:
+    from repro.kernels.ssm_scan.ops import ssm_scan as ssm_kernel_op
+    y_x = L.ssm_apply(p, x, cfg, impl="xla")
+    # emulate impl='pallas' with interpret=True
+    s = cfg.ssm
+    xs, z, d_inner, dt_rank = L._ssm_inputs(p, x, cfg)
+    K = s.conv_kernel
+    xs_pad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    conv_w = p["conv_w"].astype(x.dtype)
+    xc = sum(xs_pad[:, i: i + xs.shape[1], :] * conv_w[i] for i in range(K))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
+    dt, Bm, Cm, A = L._ssm_gates(p, xc, cfg, dt_rank)
+    y_k = ssm_kernel_op(xc, dt, Bm, Cm, A, interpret=True)
+    y_k = y_k + xc * p["D"].astype(x.dtype)
+    y_k = y_k * jax.nn.silu(z)
+    y_k = y_k @ p["w_out"].astype(x.dtype)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_x), atol=2e-4, rtol=2e-4)

@@ -1,0 +1,48 @@
+"""Verify the roofline depth-extrapolation methodology on a tiny model:
+cost(L) extrapolated from unrolled L=2,4 must match the directly-lowered
+unrolled L=8 within a few percent (flops are exactly linear in depth)."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch.api import ModelApi
+from repro.launch.shapes import InputShape
+from repro.models.config import ModelConfig
+
+
+def _flops_for_depth(cfg, L, batch):
+    cfg_l = dataclasses.replace(cfg, num_layers=L, unroll_layers=True)
+    api = ModelApi(cfg_l)
+
+    def loss(params, b):
+        return api.loss_fn(params, b)[0]
+
+    params = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0)))
+    compiled = (
+        jax.jit(jax.grad(loss))
+        .lower(params, batch)
+        .compile()
+    )
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca["flops"])
+
+
+def test_depth_extrapolation_linear():
+    cfg = get_config("qwen2-1.5b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False)
+    import jax.numpy as jnp
+    B, S = 2, 64
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    f2 = _flops_for_depth(cfg, 2, batch)
+    f4 = _flops_for_depth(cfg, 4, batch)
+    f8 = _flops_for_depth(cfg, 8, batch)
+    per_layer = (f4 - f2) / 2
+    est8 = f2 + 6 * per_layer
+    assert abs(est8 - f8) / f8 < 0.05, (f2, f4, f8, est8)

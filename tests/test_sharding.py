@@ -1,0 +1,81 @@
+"""Sharding-rule tests (divisibility fallback, spec construction) — these run
+on 1 CPU device using abstract meshes via jax.sharding.Mesh over a reshaped
+device list is not possible; instead we exercise the rule logic with a 1-dev
+mesh and verify the PartitionSpec decisions symbolically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.api import ModelApi
+from repro.sharding.rules import make_rules, logical_to_spec
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape for rule construction (no devices)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+def test_divisibility_drop():
+    rules = make_rules(FakeMesh({"data": 16, "model": 16}), "train")
+    # qwen2-1.5b: 12 heads % 16 != 0 -> dropped; mlp 8960 % 16 == 0 -> kept
+    spec = logical_to_spec({"wq": ("embed", "heads", "head_dim")}, rules,
+                           {"wq": (1536, 12, 128)})
+    assert spec["wq"] == P("data")  # heads dropped, embed kept
+    assert ("heads", 12, 16) in rules.dropped
+    spec2 = logical_to_spec({"w": ("embed", "mlp")}, rules, {"w": (1536, 8960)})
+    assert spec2["w"] == P("data", "model")
+
+
+def test_batch_axes_multipod():
+    rules = make_rules(FakeMesh({"pod": 2, "data": 16, "model": 16}), "train")
+    spec = logical_to_spec({"t": ("batch", None)}, rules, {"t": (256, 4096)})
+    assert spec["t"] == P(("pod", "data"))
+    # batch=1 is not divisible -> replicated
+    spec1 = logical_to_spec({"t": ("batch", None)}, rules, {"t": (1, 1)})
+    assert spec1["t"] == P()
+
+
+def test_duplicate_mesh_axis_dropped():
+    rules = make_rules(FakeMesh({"data": 4, "model": 4}), "train")
+    # two logical axes both mapping to "model": second must drop
+    spec = logical_to_spec({"w": ("vocab", "mlp")}, rules, {"w": (1024, 1024)})
+    assert spec["w"] == P("model")
+
+
+def test_serve_rules_no_fsdp():
+    rules = make_rules(FakeMesh({"data": 16, "model": 16}), "serve")
+    spec = logical_to_spec({"w": ("embed", "mlp")}, rules, {"w": (4096, 14336)})
+    assert spec["w"] == P(None, "model")
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "deepseek-v2-236b", "hymba-1.5b"])
+def test_param_axes_match_shapes(arch):
+    """Every param's logical-axes tuple has one entry per dimension."""
+    cfg = get_config(arch)
+    api = ModelApi(cfg)
+    axes = api.param_axes()
+    shapes = jax.tree_util.tree_map(lambda s: s.shape, api.abstract_params())
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    ax_leaves = jax.tree_util.tree_leaves(axes, is_leaf=is_axes)
+    sh_leaves = jax.tree_util.tree_leaves(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(ax_leaves) == len(sh_leaves)
+    for a, s in zip(ax_leaves, sh_leaves):
+        assert len(a) == len(s), (a, s)
+
+
+def test_moe_expert_axis_sharded():
+    cfg = get_config("deepseek-v2-236b")
+    rules = make_rules(FakeMesh({"data": 16, "model": 16}), "train")
+    api = ModelApi(cfg)
+    axes = api.param_axes()
+    shapes = jax.tree_util.tree_map(lambda s: s.shape, api.abstract_params())
+    specs = logical_to_spec(axes, rules, shapes)
+    wg = specs["blocks"]["moe"]["w_gate"]
+    # (layers, experts, embed, mlp): experts (160) -> model, embed -> data
+    assert wg == P(None, "model", "data")
