@@ -1,8 +1,10 @@
 """Fig. 6 analogue: communication-vs-loss trade-off curves per policy.
 
-Reads the table_nn5/table_ev results and renders an ASCII scatter + checks the
-paper's headline claim: at parity RMSE, PSGF-Fed communicates >=25% less than
-PSO-Fed (we assert the Pareto-dominance direction on the synthetic data).
+Reads the table_nn5/table_ev results (benchmarks/table23.py, produced by the
+unified engine's scan driver — repro/core/fl/engine.py) and renders an ASCII
+scatter + checks the paper's headline claim: at parity RMSE, PSGF-Fed
+communicates >=25% less than PSO-Fed (we assert the Pareto-dominance
+direction on the synthetic data).
 """
 from __future__ import annotations
 
@@ -45,10 +47,13 @@ def run(which: str = "nn5"):
         print(f"fig6: no results for {which}; run benchmarks.table23 first")
         return None
     rows = json.load(open(path))["rows"]
+    if not rows:
+        print(f"fig6: empty results for {which}")
+        return None
     print(ascii_scatter(rows))
     front = pareto(rows)
-    print("pareto front:", [(r["policy"], f"{r['comm_params']:.2e}", r["rmse"])
-                            for r in front])
+    print("pareto front:", [(r["policy"], f"{r['comm_params']:.2e}", r["rmse"],
+                             f"{r.get('rounds', '?')}r") for r in front])
     # headline claim: a psgf config matches (or beats) the best pso rmse with
     # less communication
     pso = [r for r in rows if r["policy"].startswith("pso")]

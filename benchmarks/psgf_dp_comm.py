@@ -10,8 +10,12 @@ HLO, comparing:
   * psgf_sync_static at share_ratio r in {0.5, 0.3, 0.2}, forward 0.2.
 
 This is the paper's Table II/III trade-off re-expressed as bytes on the pod
-interconnect: HLO collective bytes must scale ~r. Results ->
-experiments/psgf_dp/comm.json.
+interconnect: HLO collective bytes must scale ~r. ``psgf_sync_static`` is the
+static-schedule companion of the engine's traced leaf-granularity sync
+(repro/core/fl/engine.py ``sync_round`` + policies.LeafPSGF): gates are
+host-sampled python bools, so unshared leaves lower to NO collective at all —
+the property this benchmark quantifies and tests/test_engine.py asserts.
+Results -> experiments/psgf_dp/comm.json.
 """
 import json
 

@@ -63,9 +63,12 @@ def kernel_microbench():
 
 
 def fl_round_bench():
-    """us per FL round per policy (the system's inner loop)."""
+    """us per FL round per policy (the system's inner loop, engine-dispatched).
+
+    Driver-level rounds/sec (loop vs scan) lives in benchmarks/fl_rounds.py.
+    """
     from repro.core import forecast as F
-    from repro.core.fl.strategies import FLConfig, fl_round, init_fl_state
+    from repro.core.fl.engine import FLConfig, fl_round, init_fl_state
     from repro.data.synthetic import nn5_synthetic
     from repro.data.windowing import client_datasets
 
@@ -89,6 +92,9 @@ def main() -> None:
     kernel_microbench()
     print("== FL round micro-benchmarks ==")
     fl_round_bench()
+    print("== FL round-driver benchmark (loop vs scan) ==")
+    from benchmarks import fl_rounds
+    fl_rounds.run(quick=not full)
     print("== Table I (centralized forecasting) ==")
     from benchmarks import table1
     table1.run(quick=not full)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import forecast as F
-from repro.core.fl import FLConfig, run_fl
+from repro.core.fl.engine import FLConfig, run_fl
 from repro.data.synthetic import ev_synthetic, nn5_synthetic
 from repro.data.windowing import client_datasets
 from repro.data.clustering import cluster_clients
@@ -49,9 +49,12 @@ def run(which: str = "nn5", quick: bool = True):
     model_cfg = _model_cfg(quick, horizon)
     # early stopping is essential: the paper's PSGF advantage is FASTER
     # CONVERGENCE (all clients train every round), which converts to lower
-    # cumulative comm only when runs stop at convergence, not at a fixed round
+    # cumulative comm only when runs stop at convergence, not at a fixed round.
+    # The engine's scan driver checks patience at eval_every-round chunk
+    # boundaries, so eval_every bounds how far a run can overshoot.
     max_rounds = 120 if quick else 300
     patience = 8 if quick else 10
+    eval_every = 20
 
     grid = [("online", dict())]
     shares = [0.5, 0.3] if quick else [0.5, 0.4, 0.3, 0.2]
@@ -72,7 +75,7 @@ def run(which: str = "nn5", quick: bool = True):
         t0 = time.time()
         hist = run_fl(model_cfg, fl_cfg, train, test, jax.random.PRNGKey(0),
                       max_rounds=max_rounds, patience=patience,
-                      eval_every=max_rounds)
+                      eval_every=eval_every)
         name = policy
         if policy != "online":
             name += f"-s{int(kw.get('share_ratio', 0) * 100)}"

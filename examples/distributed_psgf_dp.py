@@ -7,6 +7,10 @@ policy (DESIGN.md §4), on 8 virtual devices arranged (2 pods, 2 data, 2 model).
 Two pods train a reduced qwen2 on DIFFERENT data shards with H local steps
 between syncs; the sync step exchanges only a fraction of parameter leaves
 (plus a smaller forwarded subset) and we report wire bytes vs full sync.
+Uses the STATIC-schedule sync (host-sampled gates -> collective-free HLO for
+unshared leaves); the traced single-program variant is the unified engine's
+``sync_round`` (repro/core/fl/engine.py), reachable here as ``P.psgf_sync``
+and from the CLI as ``python -m repro.launch.train --sync psgf``.
 
   PYTHONPATH=src python examples/distributed_psgf_dp.py
 """

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import forecast as F
-from repro.core.fl import FLConfig, run_fl
+from repro.core.fl.engine import FLConfig, run_fl
 from repro.data.clustering import cluster_clients
 from repro.data.synthetic import ev_synthetic
 from repro.data.windowing import client_datasets
@@ -59,9 +59,10 @@ def main():
             tr, va, te, _ = client_datasets(series[idx], look_back, horizon)
             fl_cfg = FLConfig(policy=policy, num_clients=tr.shape[0],
                               select_ratio=0.5, local_steps=4, batch_size=32, **kw)
+            # scan driver: patience is checked at eval_every-round boundaries
             hist = run_fl(model_cfg, fl_cfg, jnp.asarray(tr), jnp.asarray(te),
                           jax.random.PRNGKey(c), max_rounds=args.rounds,
-                          patience=10, eval_every=50)
+                          patience=10, eval_every=25)
             tot_comm += hist["final_comm"]
             rmses.append(hist["final_rmse"])
             print(f"   {policy:7s} cluster {c}: rounds {hist['rounds_run']:4d} "

@@ -1,3 +1,11 @@
-from repro.core.fl.masks import bernoulli_mask, exact_k_mask, client_masks
-from repro.core.fl.strategies import FLConfig, init_fl_state, fl_round
-from repro.core.fl.simulator import run_fl, evaluate_rmse
+from repro.core.fl.masks import (
+    bernoulli_mask, exact_k_mask, client_masks, leaf_gates, select_clients,
+    topk_mask,
+)
+from repro.core.fl.policies import (
+    LeafPSGF, OnlineFed, PSGFFed, PSGFTopK, PSOFed, Policy, from_config,
+)
+from repro.core.fl.engine import (
+    ACCOUNTING_DTYPE, FLConfig, aggregate, evaluate_rmse, fl_round, gate_bytes,
+    gate_count, init_fl_state, mix_down, run_fl, shard_client_state, sync_round,
+)

@@ -1,0 +1,487 @@
+"""Unified federated-learning engine: ONE gate/aggregate/distribute core for
+every partial-sharing policy, plus a compiled multi-round driver.
+
+The paper's algorithm family (Online-Fed / PSO-Fed / PSGF-Fed, eqs. 3-6) and
+its datacenter mapping (repro/core/psgf_dp.py) used to be two separate
+implementations. Here both are expressed through a :class:`~repro.core.fl.
+policies.Policy` (downlink gates / uplink gates / train-set selection) driving
+three primitives that work on any client-stacked pytree:
+
+  * :func:`mix_down`   — clients receive ``gate * global + (1-gate) * local``
+                         (eqs. 3/4/6, one lerp per leaf);
+  * :func:`aggregate`  — the server folds gated client contributions into the
+                         global model (eqs. 3/5), ``sum_k(up_k * w_k +
+                         (sel_k - up_k) * g) / C``;
+  * :func:`gate_count` / :func:`gate_bytes` — exact communication accounting
+                         from the realized gates.
+
+Round driving is a chunked ``jax.lax.scan``: ``eval_every`` rounds compile
+into ONE dispatch with a donated carry, and the host only syncs (convergence /
+patience / RMSE eval) at chunk boundaries — no O(rounds) host round-trips.
+Client state is a ``(K, D)`` matrix (plus Adam moments); ``FLConfig.
+client_chunk`` bounds how many clients are materialized per LocalUpdate step
+(chunked vmap via ``lax.map(batch_size=...)``) so ``num_clients=512+`` runs on
+a single host, and :func:`shard_client_state` lays the client axis out across
+local devices when more than one is available.
+
+Entry points:
+  * :func:`fl_round` — one global iteration (flat client space);
+  * :func:`run_fl`   — multi-round driver (``driver="scan"`` is the compiled
+                       default; ``driver="loop"`` keeps the legacy per-round
+                       Python loop for A/B benchmarking);
+  * :func:`sync_round` — the train-free gate/aggregate/distribute cycle used
+                       by ``psgf_dp.psgf_sync`` at leaf granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree_utils import tree_flatten_to_vector, tree_unflatten_from_vector
+from repro.core import forecast
+from repro.core.fl import masks as M
+from repro.core.fl import policies as pol
+
+# One accounting dtype for every communication counter (comm_down / comm_up /
+# wire_bytes): counters reach ~1e12 for paper-scale runs, well inside float32's
+# exact-integer range only up to 2^24 — but these are *accumulated float sums*
+# of mask densities, where float32's relative error is what matters (and is
+# plenty). Unifying the dtype keeps scan carries stable and avoids the seed's
+# conditional float64 leak.
+ACCOUNTING_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    policy: str = "psgf"           # online | pso | psgf | psgf_topk
+    num_clients: int = 58
+    select_ratio: float = 0.5      # paper: 50% for all methods
+    share_ratio: float = 0.3       # PSO/PSGF S-mask density (paper col. 2)
+    forward_ratio: float = 0.2     # PSGF F-mask density (PSGF-Fed-20%/30%)
+    local_steps: int = 4
+    batch_size: int = 32
+    lr: float = 1e-3               # Adam, paper setting
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    # ---- beyond-paper knobs -------------------------------------------------
+    # psgf_topk: replace RANDOM S/F masks with magnitude-based ones — share the
+    # share_ratio*D parameters where |w_global - w_client| is largest (server
+    # ranks against its stale copy of each client's last upload).
+    # comm_bits: payload precision on the wire (32 = paper; 16 = bf16-style
+    # quantized exchange). Counted in metrics["comm_bytes"].
+    comm_bits: int = 32
+    # client_chunk: upper bound on clients materialized per LocalUpdate step.
+    # None = plain vmap over all K clients (fine to ~100 clients); set to e.g.
+    # 64 to run num_clients=512+ without K-way replication of activations.
+    client_chunk: Optional[int] = None
+
+
+# ---------------------------------------------------------------------------
+# gate/aggregate/distribute core (granularity-agnostic)
+# ---------------------------------------------------------------------------
+
+
+def mix_down(client_tree, global_tree, gates):
+    """Clients receive ``gate * global + (1 - gate) * local`` (eqs. 3/4/6).
+
+    ``client_tree`` leaves are ``(K, *s)``; ``global_tree`` leaves ``(*s)``;
+    ``gates`` leaves broadcast against the client leaves ((K, *s) at element
+    granularity, (K, 1, ..., 1) at leaf granularity).
+    """
+    return jax.tree_util.tree_map(
+        lambda l, g, m: m * g[None] + (1.0 - m) * l,
+        client_tree, global_tree, gates,
+    )
+
+
+def aggregate(client_tree, global_tree, up_gates, selected):
+    """Server update (eqs. 3/5): gated mean over the selected clients.
+
+    Per leaf: ``sum_k(up_k * w_k + (sel_k - up_k) * g) / C`` — parameters a
+    selected client does NOT share contribute the server's own value, so the
+    mean stays well-normalized at any gate density. With scalar per-leaf
+    gates this reduces to psgf_dp's ``gs * mean_sel + (1 - gs) * g``.
+    """
+    C = jnp.maximum(jnp.sum(selected), 1).astype(jnp.float32)
+
+    def per_leaf(l, g, m):
+        sel = selected.reshape((selected.shape[0],) + (1,) * (l.ndim - 1))
+        contrib = m * l + (sel.astype(jnp.float32) - m) * g[None]
+        return jnp.sum(contrib, axis=0) / C
+
+    return jax.tree_util.tree_map(per_leaf, client_tree, global_tree, up_gates)
+
+
+def _gate_scale(gate_leaf, client_leaf) -> int:
+    """Elements of a client leaf covered by ONE gate entry (1 at element
+    granularity, leaf_size at leaf granularity)."""
+    g = max(int(np.prod(gate_leaf.shape[1:], dtype=np.int64)), 1)
+    return int(np.prod(client_leaf.shape[1:], dtype=np.int64)) // g
+
+
+def gate_count(gates, client_tree):
+    """Number of parameters crossing the wire given realized gates."""
+    total = jnp.zeros((), ACCOUNTING_DTYPE)
+    for g, l in zip(jax.tree_util.tree_leaves(gates),
+                    jax.tree_util.tree_leaves(client_tree)):
+        s = jnp.sum(g, dtype=ACCOUNTING_DTYPE)
+        scale = _gate_scale(g, l)
+        total = total + (s if scale == 1 else s * scale)
+    return total
+
+
+def gate_bytes(gates, client_tree):
+    """Bytes crossing the wire (uses each client leaf's dtype itemsize)."""
+    total = jnp.zeros((), ACCOUNTING_DTYPE)
+    for g, l in zip(jax.tree_util.tree_leaves(gates),
+                    jax.tree_util.tree_leaves(client_tree)):
+        per_gate = _gate_scale(g, l) * jnp.dtype(l.dtype).itemsize
+        total = total + jnp.sum(g, dtype=ACCOUNTING_DTYPE) * per_gate
+    return total
+
+
+def sync_round(local, global_, key, policy, select_ratio: float):
+    """Train-free gate/aggregate/distribute cycle over client-stacked pytrees.
+
+    The traced path of ``psgf_dp.psgf_sync`` expressed through the engine:
+    select clients -> uplink-aggregate into the global model -> downlink-mix
+    the fresh global back into every client. Returns
+    ``(new_local, new_global, stats)`` with exact wire-byte accounting.
+    """
+    num_clients = jax.tree_util.tree_leaves(local)[0].shape[0]
+    k_sel, k_share, k_fwd = jax.random.split(key, 3)
+    selected = M.select_clients(k_sel, num_clients, select_ratio)
+
+    down = policy.downlink_gates((k_share, k_fwd), global_, local, selected)
+    # k_share (not a fresh key) ties the uplink S-masks to the downlink ones:
+    # the same leaf subset is aggregated and written back within one sync.
+    up = policy.uplink_gates(k_share, global_, local, selected)
+
+    new_global = aggregate(local, global_, up, selected)
+    new_local = mix_down(local, new_global, down)
+    stats = {
+        "wire_bytes": gate_bytes(down, local) + gate_bytes(up, local),
+        "num_selected": jnp.sum(selected),
+    }
+    return new_local, new_global, stats
+
+
+# ---------------------------------------------------------------------------
+# flat client space: state init + LocalUpdate
+# ---------------------------------------------------------------------------
+
+
+def init_fl_state(model_cfg: forecast.ForecastConfig, fl_cfg: FLConfig, key):
+    """State: global vector, per-client vectors + per-client Adam moments."""
+    params = forecast.init_params(model_cfg, key)
+    vec, meta = tree_flatten_to_vector(params)
+    K = fl_cfg.num_clients
+    state = {
+        "w_global": vec,
+        "w_clients": jnp.tile(vec[None, :], (K, 1)),
+        "adam_m": jnp.zeros((K, vec.shape[0])),
+        "adam_v": jnp.zeros((K, vec.shape[0])),
+        "adam_t": jnp.zeros((K,), jnp.int32),
+        "round": jnp.zeros((), jnp.int32),
+        "comm_down": jnp.zeros((), ACCOUNTING_DTYPE),
+        "comm_up": jnp.zeros((), ACCOUNTING_DTYPE),
+    }
+    return state, meta
+
+
+def _local_update(model_cfg, fl_cfg, meta, w, m, v, t, data, key):
+    """Per-client LocalUpdate: ``local_steps`` Adam steps on minibatches.
+
+    data: (n_win, L+T) windows for ONE client. Operates on the flat vector.
+    """
+    Lb = model_cfg.look_back
+
+    def loss_vec(wv, x, y):
+        params = tree_unflatten_from_vector(wv, meta)
+        return forecast.mse_loss(model_cfg, params, x, y)
+
+    def step(carry, skey):
+        w, m, v, t = carry
+        idx = jax.random.randint(skey, (fl_cfg.batch_size,), 0, data.shape[0])
+        batch = data[idx]
+        x, y = batch[:, :Lb], batch[:, Lb:]
+        loss, g = jax.value_and_grad(loss_vec)(w, x, y)
+        t = t + 1
+        m = fl_cfg.adam_b1 * m + (1 - fl_cfg.adam_b1) * g
+        v = fl_cfg.adam_b2 * v + (1 - fl_cfg.adam_b2) * jnp.square(g)
+        mhat = m / (1 - fl_cfg.adam_b1 ** t)
+        vhat = v / (1 - fl_cfg.adam_b2 ** t)
+        w = w - fl_cfg.lr * mhat / (jnp.sqrt(vhat) + fl_cfg.adam_eps)
+        return (w, m, v, t), loss
+
+    keys = jax.random.split(key, fl_cfg.local_steps)
+    (w, m, v, t), losses = jax.lax.scan(step, (w, m, v, t), keys)
+    return w, m, v, t, jnp.mean(losses)
+
+
+def _local_update_all(model_cfg, fl_cfg, meta, w, m, v, t, data, keys):
+    """LocalUpdate across all K clients: plain vmap, or chunked vmap via
+    ``lax.map(batch_size=client_chunk)`` so only ``client_chunk`` clients'
+    activations are live at once (the (K, D) state itself stays resident —
+    it is O(K*D), the activations are what explode with K)."""
+    K = w.shape[0]
+    xs = (w, m, v, t, data, keys)
+    f = lambda w_, m_, v_, t_, d_, k_: _local_update(
+        model_cfg, fl_cfg, meta, w_, m_, v_, t_, d_, k_)
+    if fl_cfg.client_chunk is not None and fl_cfg.client_chunk < K:
+        return jax.lax.map(lambda a: f(*a), xs, batch_size=fl_cfg.client_chunk)
+    return jax.vmap(f)(*xs)
+
+
+# ---------------------------------------------------------------------------
+# one round (flat client space)
+# ---------------------------------------------------------------------------
+
+
+def _round(state, data, key, model_cfg, fl_cfg, meta, policy):
+    """One global FL iteration. data: (K, n_win, L+T)."""
+    K = fl_cfg.num_clients
+    k_sel, k_smask, k_fmask, k_upmask, k_local = jax.random.split(key, 5)
+
+    selected = M.select_clients(k_sel, K, fl_cfg.select_ratio)  # (K,)
+
+    # ---- downlink: policy builds per-client receive gates ------------------
+    gates = policy.downlink_gates(
+        (k_smask, k_fmask), state["w_global"], state["w_clients"], selected)
+
+    if fl_cfg.comm_bits < 32:
+        # quantized downlink payload (beyond-paper): bf16-style round-trip
+        w_wire = state["w_global"].astype(jnp.bfloat16).astype(jnp.float32)
+    else:
+        w_wire = state["w_global"]
+
+    w_mixed = mix_down(state["w_clients"], w_wire, gates)
+    comm_down = state["comm_down"] + gate_count(gates, state["w_clients"])
+
+    # ---- LocalUpdate -------------------------------------------------------
+    trains = policy.train_mask(selected)
+
+    local_keys = jax.random.split(k_local, K)
+    upd = _local_update_all(model_cfg, fl_cfg, meta, w_mixed, state["adam_m"],
+                            state["adam_v"], state["adam_t"], data, local_keys)
+    w_new, m_new, v_new, t_new, losses = upd
+
+    tr = trains[:, None].astype(jnp.float32)
+    w_clients = tr * w_new + (1 - tr) * w_mixed
+    adam_m = tr * m_new + (1 - tr) * state["adam_m"]
+    adam_v = tr * v_new + (1 - tr) * state["adam_v"]
+    adam_t = jnp.where(trains, t_new, state["adam_t"])
+
+    # ---- uplink + aggregation (eq. 5; eq. 3 when S' == I) ------------------
+    up_masks = policy.uplink_gates(k_upmask, state["w_global"], w_clients, selected)
+
+    if fl_cfg.comm_bits < 32:
+        w_clients_wire = w_clients.astype(jnp.bfloat16).astype(jnp.float32)
+    else:
+        w_clients_wire = w_clients
+
+    w_global = aggregate(w_clients_wire, state["w_global"], up_masks, selected)
+    comm_up = state["comm_up"] + gate_count(up_masks, w_clients)
+
+    new_state = {
+        "w_global": w_global,
+        "w_clients": w_clients,
+        "adam_m": adam_m,
+        "adam_v": adam_v,
+        "adam_t": adam_t,
+        "round": state["round"] + 1,
+        "comm_down": comm_down,
+        "comm_up": comm_up,
+    }
+    metrics = {
+        "train_loss": jnp.sum(losses * trains) / jnp.maximum(jnp.sum(trains), 1),
+        "num_selected": jnp.sum(selected),
+        "comm_total": comm_down + comm_up,
+        "comm_bytes": (comm_down + comm_up) * (fl_cfg.comm_bits / 8.0),
+    }
+    return new_state, metrics
+
+
+@partial(jax.jit, static_argnames=("model_cfg", "fl_cfg", "meta", "policy"))
+def _round_jit(state, data, key, model_cfg, fl_cfg, meta, policy):
+    return _round(state, data, key, model_cfg, fl_cfg, meta, policy)
+
+
+def fl_round(state, data, key, model_cfg: forecast.ForecastConfig,
+             fl_cfg: FLConfig, meta, policy=None):
+    """One jitted global FL iteration. ``policy=None`` resolves the element-
+    granularity policy from ``fl_cfg.policy``."""
+    policy = pol.from_config(fl_cfg) if policy is None else policy
+    return _round_jit(state, data, key, model_cfg, fl_cfg, meta, policy)
+
+
+# ---------------------------------------------------------------------------
+# multi-round drivers
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit,
+         static_argnames=("model_cfg", "fl_cfg", "meta", "policy", "num_rounds"),
+         donate_argnames=("state",))
+def _run_chunk(state, key, data, model_cfg, fl_cfg, meta, policy, num_rounds):
+    """``num_rounds`` FL rounds in ONE dispatch: lax.scan with donated client
+    state (the (K, D) matrices are updated in place across rounds). Returns
+    the final carry plus per-round stacked metrics."""
+
+    def body(carry, _):
+        state, key = carry
+        key, rk = jax.random.split(key)
+        state, metrics = _round(state, data, rk, model_cfg, fl_cfg, meta, policy)
+        return (state, key), {"train_loss": metrics["train_loss"],
+                              "comm_total": metrics["comm_total"]}
+
+    (state, key), ms = jax.lax.scan(body, (state, key), None, length=num_rounds)
+    return state, key, ms
+
+
+def evaluate_rmse(model_cfg: forecast.ForecastConfig, w_vec, meta, data) -> float:
+    """RMSE of the global model over all clients' test windows.
+
+    data: (K, n_win, L+T).
+    """
+    params = tree_unflatten_from_vector(w_vec, meta)
+    Lb = model_cfg.look_back
+    K, n, _ = data.shape
+    x = data[:, :, :Lb].reshape(K * n, Lb)
+    y = data[:, :, Lb:].reshape(K * n, model_cfg.horizon)
+    pred = forecast.forward(model_cfg, params, x)
+    return float(jnp.sqrt(jnp.mean(jnp.square(pred - y))))
+
+
+def shard_client_state(state, mesh_axis: str = "clients"):
+    """Lay the client axis of the FL state out across local devices.
+
+    No-op on a single device. With N devices, the (K, ...) client arrays are
+    sharded N-way along axis 0 (server-side scalars/vectors replicated), so
+    the vmapped LocalUpdate runs clients in parallel across devices instead
+    of replicating all client state on one.
+    """
+    devices = jax.devices()
+    if len(devices) <= 1:
+        return state
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh = jax.make_mesh((len(devices),), (mesh_axis,))
+    client_keys = {"w_clients", "adam_m", "adam_v", "adam_t"}
+    sharded = NamedSharding(mesh, PartitionSpec(mesh_axis))
+    replicated = NamedSharding(mesh, PartitionSpec())
+    return {
+        k: jax.device_put(v, sharded if k in client_keys
+                          and v.shape[0] % len(devices) == 0 else replicated)
+        for k, v in state.items()
+    }
+
+
+def run_fl(
+    model_cfg: forecast.ForecastConfig,
+    fl_cfg: FLConfig,
+    train_data,
+    test_data,
+    key,
+    max_rounds: int = 300,
+    patience: int = 10,
+    eval_every: int = 10,
+    verbose: bool = False,
+    driver: str = "scan",
+    policy=None,
+    shard_clients: bool = False,
+):
+    """Multi-round FL driver. Returns a history dict with per-round loss,
+    cumulative comm, and final RMSE.
+
+    ``driver="scan"`` (default) compiles ``eval_every`` rounds per dispatch
+    and checks convergence only at chunk boundaries — identical round-by-round
+    math to the loop driver (same seed -> same per-round states), but when
+    patience triggers mid-chunk the run stops at the NEXT boundary instead of
+    mid-round, so ``rounds_run`` can exceed the loop driver's by up to
+    ``eval_every - 1``. ``driver="loop"`` is the legacy per-round Python loop
+    (one dispatch + host sync per round), kept for A/B benchmarking
+    (benchmarks/fl_rounds.py).
+    """
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    policy = pol.from_config(fl_cfg) if policy is None else policy
+    key, init_key = jax.random.split(key)
+    state, meta = init_fl_state(model_cfg, fl_cfg, init_key)
+    if shard_clients:
+        state = shard_client_state(state)
+
+    history = {"round": [], "train_loss": [], "comm": [], "rmse": []}
+    best_loss = math.inf
+    stall = 0
+    comm_total = 0.0
+    stop = False
+
+    if driver == "loop":
+        for r in range(max_rounds):
+            key, rk = jax.random.split(key)
+            state, metrics = _round_jit(state, train_data, rk, model_cfg,
+                                        fl_cfg, meta, policy)
+            loss = float(metrics["train_loss"])
+            comm_total = float(metrics["comm_total"])
+            history["round"].append(r)
+            history["train_loss"].append(loss)
+            history["comm"].append(comm_total)
+            if (r + 1) % eval_every == 0 or r == max_rounds - 1:
+                rmse = evaluate_rmse(model_cfg, state["w_global"], meta, test_data)
+                history["rmse"].append((r, rmse))
+                if verbose:
+                    print(f"round {r:4d}  loss {loss:.4f}  rmse {rmse:.4f}  "
+                          f"comm {comm_total:.3e}")
+            if loss < best_loss - 1e-5:
+                best_loss = loss
+                stall = 0
+            else:
+                stall += 1
+                if stall >= patience:
+                    break
+    elif driver == "scan":
+        r = 0
+        while r < max_rounds and not stop:
+            n = min(eval_every, max_rounds - r)
+            state, key, ms = _run_chunk(state, key, train_data, model_cfg,
+                                        fl_cfg, meta, policy, n)
+            losses = np.asarray(ms["train_loss"])   # ONE host sync per chunk
+            comms = np.asarray(ms["comm_total"])
+            history["round"].extend(range(r, r + n))
+            history["train_loss"].extend(losses.tolist())
+            history["comm"].extend(comms.tolist())
+            comm_total = float(comms[-1])
+            r += n
+            # host-side convergence/patience, chunk boundary only
+            for loss in losses.tolist():
+                if loss < best_loss - 1e-5:
+                    best_loss = loss
+                    stall = 0
+                else:
+                    stall += 1
+                    if stall >= patience:
+                        stop = True
+                        break
+            rmse = evaluate_rmse(model_cfg, state["w_global"], meta, test_data)
+            history["rmse"].append((r - 1, rmse))
+            if verbose:
+                print(f"round {r - 1:4d}  loss {losses[-1]:.4f}  "
+                      f"rmse {rmse:.4f}  comm {comm_total:.3e}")
+    else:
+        raise ValueError(f"unknown driver: {driver!r}")
+
+    final_rmse = evaluate_rmse(model_cfg, state["w_global"], meta, test_data)
+    history["final_rmse"] = final_rmse
+    history["final_comm"] = comm_total
+    history["rounds_run"] = len(history["round"])
+    history["state"] = state
+    history["meta"] = meta
+    return history

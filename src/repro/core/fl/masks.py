@@ -2,8 +2,10 @@
 
 The paper's S_n^i (sharing) and F_n^i (forwarding) matrices are DxD diagonal
 0/1 matrices; we represent them as boolean vectors over the flattened
-parameter vector (element granularity — the faithful mode). The datacenter
-variant (psgf_dp) uses leaf granularity instead; see repro/core/psgf_dp.py.
+parameter vector (element granularity — the faithful mode). The engine's
+leaf-granularity policy (repro/core/fl/policies.py) uses ``leaf_gates``
+instead: whole pytree leaves either cross the wire or don't, which is the
+datacenter-native analogue (see repro/core/psgf_dp.py).
 """
 from __future__ import annotations
 
@@ -19,10 +21,24 @@ def bernoulli_mask(key, dim: int, ratio: float) -> jnp.ndarray:
 
 def exact_k_mask(key, dim: int, k: int) -> jnp.ndarray:
     """Mask with exactly k ones (paper's 'M ones for selected diagonal
-    elements'). O(D log D); used in tests and small models."""
+    elements'). Index-based ``top_k`` (not score thresholding) so duplicate
+    scores break ties deterministically by position and the mask NEVER has
+    more than k ones — communication accounting stays exact."""
+    if k <= 0:
+        return jnp.zeros((dim,), bool)
     scores = jax.random.uniform(key, (dim,))
-    thresh = -jnp.sort(-scores)[k - 1] if k > 0 else jnp.inf
-    return scores >= thresh
+    _, idx = jax.lax.top_k(scores, min(k, dim))
+    return jnp.zeros((dim,), bool).at[idx].set(True)
+
+
+def topk_mask(scores, k: int) -> jnp.ndarray:
+    """(K, D) scores -> boolean mask with exactly k True per row (largest
+    scores win; ties broken by lowest index via ``top_k``)."""
+    _, idx = jax.lax.top_k(scores, k)  # (K, k)
+    K = scores.shape[0]
+    mask = jnp.zeros(scores.shape, bool)
+    rows = jnp.arange(K)[:, None]
+    return mask.at[rows, idx].set(True)
 
 
 def client_masks(key, num_clients: int, dim: int, ratio: float) -> jnp.ndarray:
@@ -37,3 +53,20 @@ def select_clients(key, num_clients: int, select_ratio: float) -> jnp.ndarray:
     perm = jax.random.permutation(key, num_clients)
     sel = jnp.zeros((num_clients,), bool).at[perm[:c]].set(True)
     return sel
+
+
+def leaf_gates(key, tree, ratio: float):
+    """Per-leaf Bernoulli(ratio) scalar gates (0./1.), jit-traceable.
+
+    Leaf granularity is the TPU-native analogue of the paper's diagonal S/F
+    matrices: whole leaves either cross the pod link or don't, so saved
+    elements are saved bytes on the wire. Deterministic in ``key``: the same
+    key always yields the same gates (the leaf engine policy relies on this
+    to tie uplink and downlink S-masks together).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    gates = []
+    for i, _ in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        gates.append((jax.random.uniform(k, ()) < ratio).astype(jnp.float32))
+    return jax.tree_util.tree_unflatten(treedef, gates)

@@ -1,0 +1,209 @@
+"""Gating policies for the unified FL engine (repro/core/fl/engine.py).
+
+A :class:`Policy` answers the three questions every partial-sharing FL round
+asks (paper eqs. 3-6):
+
+  * ``downlink_gates`` — which parameters does each client RECEIVE from the
+    server this round (S_n^i for selected clients, F_n^i for unselected)?
+  * ``uplink_gates``   — which parameters does each selected client SEND back
+    for aggregation (S'_n^i)?
+  * ``train_mask``     — which clients run LocalUpdate this round?
+
+Gates are pytrees whose leaves broadcast against the client-stacked state
+leaves ``(K, *leaf_shape)``; a gate entry of 1.0 means that parameter crosses
+the server<->client wire and is counted by the engine's communication
+accounting. Two granularities share the protocol:
+
+  * element granularity (``OnlineFed``/``PSOFed``/``PSGFFed``/``PSGFTopK``):
+    the faithful mode — state is the flat ``(K, D)`` client matrix and gates
+    are dense ``(K, D)`` 0/1 arrays, exactly the paper's diagonal matrices;
+  * leaf granularity (``LeafPSGF``): the datacenter mode — whole pytree
+    leaves cross the pod interconnect or don't (gates are ``(K, 1, ..., 1)``
+    per-leaf scalars), so saved elements are saved bytes on dense collectives.
+
+All instances are frozen dataclasses: hashable, so they ride through
+``jax.jit`` as static arguments and equal configs share compile caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fl import masks as M
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """Downlink/uplink gating + train-set selection for one FL round.
+
+    ``global_tree``: server parameters (no client axis).
+    ``client_tree``: client-stacked parameters, leaves ``(K, *leaf_shape)``.
+    ``selected``: boolean ``(K,)`` from the engine's client selection.
+    ``keys``: for ``downlink_gates`` a ``(share_key, forward_key)`` pair; for
+    ``uplink_gates`` a single key.
+    """
+
+    def downlink_gates(self, keys, global_tree, client_tree, selected): ...
+
+    def uplink_gates(self, key, global_tree, client_tree, selected): ...
+
+    def train_mask(self, selected): ...
+
+
+# ---------------------------------------------------------------------------
+# element granularity (flat (K, D) client matrix — the paper-faithful mode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineFed:
+    """Online-Fed (paper eq. 3): selected clients' params are REPLACED by the
+    global model, they train, the server averages them back. Unselected
+    clients idle."""
+
+    def downlink_gates(self, keys, global_tree, client_tree, selected):
+        K, D = client_tree.shape
+        return jnp.broadcast_to(selected[:, None], (K, D)).astype(jnp.float32)
+
+    def uplink_gates(self, key, global_tree, client_tree, selected):
+        K, D = client_tree.shape
+        return jnp.broadcast_to(selected[:, None], (K, D)).astype(jnp.float32)
+
+    def train_mask(self, selected):
+        return selected  # unselected clients stay idle (paper §II.C)
+
+
+@dataclasses.dataclass(frozen=True)
+class PSOFed:
+    """PSO-Fed [12] (paper eqs. 4-5): selected clients receive a random
+    parameter subset S_n^i and everyone trains locally; the server aggregates
+    the selected clients' shared subsets."""
+
+    share_ratio: float = 0.3
+
+    def downlink_gates(self, keys, global_tree, client_tree, selected):
+        k_share, _ = keys
+        K, D = client_tree.shape
+        s_masks = M.client_masks(k_share, K, D, self.share_ratio)
+        return jnp.where(selected[:, None], s_masks, False).astype(jnp.float32)
+
+    def uplink_gates(self, key, global_tree, client_tree, selected):
+        K, D = client_tree.shape
+        return jnp.where(
+            selected[:, None], M.client_masks(key, K, D, self.share_ratio), False
+        ).astype(jnp.float32)
+
+    def train_mask(self, selected):
+        return jnp.ones_like(selected)  # PSO/PSGF: everyone self-learns
+
+
+@dataclasses.dataclass(frozen=True)
+class PSGFFed(PSOFed):
+    """PSGF-Fed (paper eq. 6 — the contribution): PSO + the server forwards a
+    small random subset F_n^i of global parameters to every UNSELECTED client
+    so all clients get some global signal each round."""
+
+    forward_ratio: float = 0.2
+
+    def downlink_gates(self, keys, global_tree, client_tree, selected):
+        k_share, k_fwd = keys
+        K, D = client_tree.shape
+        s_masks = M.client_masks(k_share, K, D, self.share_ratio)
+        f_masks = M.client_masks(k_fwd, K, D, self.forward_ratio)
+        return jnp.where(selected[:, None], s_masks, f_masks).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PSGFTopK:
+    """Beyond-paper: magnitude-based masks — share the share_ratio*D
+    parameters where |w_global - w_client| is largest (the server ranks
+    against its stale copy of each client's last upload). Index-based top-k
+    (not thresholding) so ties — e.g. the all-zero diff at round 1 — still
+    select exactly k entries."""
+
+    share_ratio: float = 0.3
+    forward_ratio: float = 0.2
+
+    def downlink_gates(self, keys, global_tree, client_tree, selected):
+        D = client_tree.shape[1]
+        diff = jnp.abs(global_tree[None, :] - client_tree)  # (K, D)
+        s_masks = M.topk_mask(diff, max(1, int(D * self.share_ratio)))
+        f_masks = M.topk_mask(diff, max(1, int(D * self.forward_ratio)))
+        return jnp.where(selected[:, None], s_masks, f_masks).astype(jnp.float32)
+
+    def uplink_gates(self, key, global_tree, client_tree, selected):
+        D = client_tree.shape[1]
+        diff_up = jnp.abs(global_tree[None, :] - client_tree)
+        m_up = M.topk_mask(diff_up, max(1, int(D * self.share_ratio)))
+        return jnp.where(selected[:, None], m_up, False).astype(jnp.float32)
+
+    def train_mask(self, selected):
+        return jnp.ones_like(selected)
+
+
+# ---------------------------------------------------------------------------
+# leaf granularity (pytree client state — the datacenter / cross-pod mode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPSGF:
+    """PSGF at leaf granularity: the traced path of ``repro.core.psgf_dp``.
+
+    Each pod is a "client"; a random subset of parameter LEAVES (share_ratio
+    of leaves) is shared by selected pods and a smaller forwarded subset
+    (forward_ratio) is pushed to unselected pods. ``leaf_gates`` is
+    deterministic in its key, so passing the downlink share key to
+    ``uplink_gates`` ties the up/down S-masks together — matching the paper's
+    datacenter mapping where the same leaf subset is aggregated and written
+    back within one sync (psgf_dp semantics).
+    """
+
+    share_ratio: float = 0.3
+    forward_ratio: float = 0.2
+
+    @staticmethod
+    def _per_client(gate_scalar, client_leaf, selected, fallback_scalar=None):
+        K = selected.shape[0]
+        sel = selected.reshape((K,) + (1,) * (client_leaf.ndim - 1))
+        if fallback_scalar is None:
+            return sel.astype(jnp.float32) * gate_scalar
+        sel_f = sel.astype(jnp.float32)
+        return sel_f * gate_scalar + (1.0 - sel_f) * fallback_scalar
+
+    def downlink_gates(self, keys, global_tree, client_tree, selected):
+        k_share, k_fwd = keys
+        g_share = M.leaf_gates(k_share, global_tree, self.share_ratio)
+        g_fwd = M.leaf_gates(k_fwd, global_tree, self.forward_ratio)
+        return jax.tree_util.tree_map(
+            lambda ll, gs, gf: self._per_client(gs, ll, selected, gf),
+            client_tree, g_share, g_fwd,
+        )
+
+    def uplink_gates(self, key, global_tree, client_tree, selected):
+        g_share = M.leaf_gates(key, global_tree, self.share_ratio)
+        return jax.tree_util.tree_map(
+            lambda ll, gs: self._per_client(gs, ll, selected),
+            client_tree, g_share,
+        )
+
+    def train_mask(self, selected):
+        return jnp.ones_like(selected)
+
+
+def from_config(fl_cfg) -> Policy:
+    """Map an ``FLConfig.policy`` string to its element-granularity Policy."""
+    if fl_cfg.policy == "online":
+        return OnlineFed()
+    if fl_cfg.policy == "pso":
+        return PSOFed(share_ratio=fl_cfg.share_ratio)
+    if fl_cfg.policy == "psgf":
+        return PSGFFed(share_ratio=fl_cfg.share_ratio,
+                       forward_ratio=fl_cfg.forward_ratio)
+    if fl_cfg.policy == "psgf_topk":
+        return PSGFTopK(share_ratio=fl_cfg.share_ratio,
+                        forward_ratio=fl_cfg.forward_ratio)
+    raise ValueError(f"unknown FL policy: {fl_cfg.policy!r}")

@@ -1,82 +1,15 @@
-"""FL training driver: runs global rounds to convergence, tracks the paper's
-comm-vs-RMSE trade-off, and evaluates the global model.
+"""DEPRECATED shim — the FL round driver now lives in the unified engine.
 
-Convergence rule follows the paper: "training will be stopped when the model
-reaches convergence (the training loss stops decreasing for 10 rounds)".
+:func:`repro.core.fl.engine.run_fl` replaces the per-round Python loop that
+used to live here with a chunked ``jax.lax.scan`` driver (``eval_every``
+rounds per dispatch, donated carry, host-side convergence/patience checks at
+chunk boundaries only). The legacy loop survives as ``driver="loop"`` for
+A/B benchmarking (benchmarks/fl_rounds.py).
+
+This module keeps the seed repo's public names (``run_fl``,
+``evaluate_rmse``) as re-exports; new code should import from
+``repro.core.fl.engine`` directly.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.common.pytree_utils import tree_unflatten_from_vector
-from repro.core import forecast
-from repro.core.fl.strategies import FLConfig, fl_round, init_fl_state
-
-
-def evaluate_rmse(model_cfg: forecast.ForecastConfig, w_vec, meta, data) -> float:
-    """RMSE of the global model over all clients' test windows.
-
-    data: (K, n_win, L+T).
-    """
-    params = tree_unflatten_from_vector(w_vec, meta)
-    Lb = model_cfg.look_back
-    K, n, _ = data.shape
-    x = data[:, :, :Lb].reshape(K * n, Lb)
-    y = data[:, :, Lb:].reshape(K * n, model_cfg.horizon)
-    pred = forecast.forward(model_cfg, params, x)
-    return float(jnp.sqrt(jnp.mean(jnp.square(pred - y))))
-
-
-def run_fl(
-    model_cfg: forecast.ForecastConfig,
-    fl_cfg: FLConfig,
-    train_data,
-    test_data,
-    key,
-    max_rounds: int = 300,
-    patience: int = 10,
-    eval_every: int = 10,
-    verbose: bool = False,
-):
-    """Returns a history dict with per-round loss, cumulative comm, final RMSE."""
-    key, init_key = jax.random.split(key)
-    state, meta = init_fl_state(model_cfg, fl_cfg, init_key)
-
-    history = {"round": [], "train_loss": [], "comm": [], "rmse": []}
-    best_loss = math.inf
-    stall = 0
-    comm_total = 0.0
-
-    for r in range(max_rounds):
-        key, rk = jax.random.split(key)
-        state, metrics = fl_round(state, train_data, rk, model_cfg, fl_cfg, meta)
-        loss = float(metrics["train_loss"])
-        comm_total = float(metrics["comm_total"])
-        history["round"].append(r)
-        history["train_loss"].append(loss)
-        history["comm"].append(comm_total)
-        if (r + 1) % eval_every == 0 or r == max_rounds - 1:
-            rmse = evaluate_rmse(model_cfg, state["w_global"], meta, test_data)
-            history["rmse"].append((r, rmse))
-            if verbose:
-                print(f"round {r:4d}  loss {loss:.4f}  rmse {rmse:.4f}  comm {comm_total:.3e}")
-        if loss < best_loss - 1e-5:
-            best_loss = loss
-            stall = 0
-        else:
-            stall += 1
-            if stall >= patience:
-                break
-
-    final_rmse = evaluate_rmse(model_cfg, state["w_global"], meta, test_data)
-    history["final_rmse"] = final_rmse
-    history["final_comm"] = comm_total
-    history["rounds_run"] = len(history["round"])
-    history["state"] = state
-    history["meta"] = meta
-    return history
+from repro.core.fl.engine import evaluate_rmse, run_fl  # noqa: F401

@@ -1,210 +1,35 @@
-"""Federated-learning policies: Online-Fed, PSO-Fed [12], PSGF-Fed (paper's).
+"""DEPRECATED shim — the FL policies now live in the unified engine.
 
-All three are expressed as one jittable ``fl_round`` parameterized by
-:class:`FLConfig.policy`:
+The three paper policies (Online-Fed / PSO-Fed / PSGF-Fed, eqs. 3-6) plus the
+beyond-paper ``psgf_topk`` are implemented once in
 
-  online : server selects clients S_n; selected clients' params are REPLACED
-           by the global model, they train, server averages them (eq. 3).
-           Unselected clients idle.
-  pso    : selected clients receive a random parameter subset S_n^i
-           (eq. 4) and everyone trains locally; server aggregates the
-           selected clients' shared subsets (eq. 5).
-  psgf   : PSO + the server forwards a small random subset F_n^i of global
-           parameters to every UNSELECTED client (eq. 6) so all clients get
-           some global signal each round — the paper's contribution.
+  * :mod:`repro.core.fl.policies` — the :class:`Policy` protocol (downlink
+    gates / uplink gates / train-set selection) with element- and
+    leaf-granularity instances, and
+  * :mod:`repro.core.fl.engine`   — the shared gate/aggregate/distribute core,
+    ``FLConfig``, state init, and the compiled multi-round scan driver.
 
-Communication accounting (downlink + uplink scalar counters) matches the
-paper's "#Params (Comm.)" columns: each mask element that crosses the
-server<->client link counts once.
+This module keeps the seed repo's public names (``FLConfig``, ``fl_round``,
+``init_fl_state``) as thin wrappers so existing imports keep working; new code
+should import from ``repro.core.fl.engine`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.common.pytree_utils import tree_flatten_to_vector, tree_unflatten_from_vector
-from repro.core import forecast
-from repro.core.fl import masks as M
+from repro.core.fl.engine import (  # noqa: F401  (re-exported legacy API)
+    ACCOUNTING_DTYPE,
+    FLConfig,
+    _local_update,
+    init_fl_state,
+)
+from repro.core.fl import engine as _engine
+from repro.core.fl.masks import topk_mask as _topk_mask  # noqa: F401 (legacy name)
 
 
-@dataclasses.dataclass(frozen=True)
-class FLConfig:
-    policy: str = "psgf"           # online | pso | psgf | psgf_topk
-    num_clients: int = 58
-    select_ratio: float = 0.5      # paper: 50% for all methods
-    share_ratio: float = 0.3       # PSO/PSGF S-mask density (paper col. 2)
-    forward_ratio: float = 0.2     # PSGF F-mask density (PSGF-Fed-20%/30%)
-    local_steps: int = 4
-    batch_size: int = 32
-    lr: float = 1e-3               # Adam, paper setting
-    adam_b1: float = 0.9
-    adam_b2: float = 0.999
-    adam_eps: float = 1e-8
-    # ---- beyond-paper knobs -------------------------------------------------
-    # psgf_topk: replace RANDOM S/F masks with magnitude-based ones — share the
-    # share_ratio*D parameters where |w_global - w_client| is largest (server
-    # ranks against its stale copy of each client's last upload).
-    # comm_bits: payload precision on the wire (32 = paper; 16 = bf16-style
-    # quantized exchange). Counted in metrics["comm_bytes"].
-    comm_bits: int = 32
+def fl_round(state, data, key, model_cfg, fl_cfg: FLConfig, meta):
+    """DEPRECATED: use :func:`repro.core.fl.engine.fl_round`.
 
-
-def _topk_mask(scores, k: int):
-    """(K, D) scores -> boolean mask with exactly k True per row."""
-    _, idx = jax.lax.top_k(scores, k)  # (K, k)
-    K = scores.shape[0]
-    mask = jnp.zeros(scores.shape, bool)
-    rows = jnp.arange(K)[:, None]
-    return mask.at[rows, idx].set(True)
-
-
-def init_fl_state(model_cfg: forecast.ForecastConfig, fl_cfg: FLConfig, key):
-    """State: global vector, per-client vectors + per-client Adam moments."""
-    params = forecast.init_params(model_cfg, key)
-    vec, meta = tree_flatten_to_vector(params)
-    K = fl_cfg.num_clients
-    state = {
-        "w_global": vec,
-        "w_clients": jnp.tile(vec[None, :], (K, 1)),
-        "adam_m": jnp.zeros((K, vec.shape[0])),
-        "adam_v": jnp.zeros((K, vec.shape[0])),
-        "adam_t": jnp.zeros((K,), jnp.int32),
-        "round": jnp.zeros((), jnp.int32),
-        "comm_down": jnp.zeros((), jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32),
-        "comm_up": jnp.zeros((), jnp.float32),
-    }
-    return state, meta
-
-
-def _local_update(model_cfg, fl_cfg, meta, w, m, v, t, data, key):
-    """Per-client LocalUpdate: ``local_steps`` Adam steps on minibatches.
-
-    data: (n_win, L+T) windows for ONE client. Operates on the flat vector.
+    One global FL iteration, dispatched through the unified engine with the
+    element-granularity policy named by ``fl_cfg.policy``. Bit-identical to
+    the seed implementation (same key splits, same op order).
     """
-    Lb = model_cfg.look_back
-
-    def loss_vec(wv, x, y):
-        params = tree_unflatten_from_vector(wv, meta)
-        return forecast.mse_loss(model_cfg, params, x, y)
-
-    def step(carry, skey):
-        w, m, v, t = carry
-        idx = jax.random.randint(skey, (fl_cfg.batch_size,), 0, data.shape[0])
-        batch = data[idx]
-        x, y = batch[:, :Lb], batch[:, Lb:]
-        loss, g = jax.value_and_grad(loss_vec)(w, x, y)
-        t = t + 1
-        m = fl_cfg.adam_b1 * m + (1 - fl_cfg.adam_b1) * g
-        v = fl_cfg.adam_b2 * v + (1 - fl_cfg.adam_b2) * jnp.square(g)
-        mhat = m / (1 - fl_cfg.adam_b1 ** t)
-        vhat = v / (1 - fl_cfg.adam_b2 ** t)
-        w = w - fl_cfg.lr * mhat / (jnp.sqrt(vhat) + fl_cfg.adam_eps)
-        return (w, m, v, t), loss
-
-    keys = jax.random.split(key, fl_cfg.local_steps)
-    (w, m, v, t), losses = jax.lax.scan(step, (w, m, v, t), keys)
-    return w, m, v, t, jnp.mean(losses)
-
-
-@partial(jax.jit, static_argnames=("model_cfg", "fl_cfg", "meta"))
-def fl_round(state, data, key, model_cfg: forecast.ForecastConfig, fl_cfg: FLConfig, meta):
-    """One global FL iteration. data: (K, n_win, L+T)."""
-    K = fl_cfg.num_clients
-    D = state["w_global"].shape[0]
-    k_sel, k_smask, k_fmask, k_upmask, k_local = jax.random.split(key, 5)
-
-    selected = M.select_clients(k_sel, K, fl_cfg.select_ratio)  # (K,)
-
-    # ---- downlink: build per-client receive gates -------------------------
-    if fl_cfg.policy == "online":
-        gates = jnp.broadcast_to(selected[:, None], (K, D)).astype(jnp.float32)
-    elif fl_cfg.policy == "pso":
-        s_masks = M.client_masks(k_smask, K, D, fl_cfg.share_ratio)
-        gates = jnp.where(selected[:, None], s_masks, False).astype(jnp.float32)
-    elif fl_cfg.policy == "psgf":
-        s_masks = M.client_masks(k_smask, K, D, fl_cfg.share_ratio)
-        f_masks = M.client_masks(k_fmask, K, D, fl_cfg.forward_ratio)
-        gates = jnp.where(selected[:, None], s_masks, f_masks).astype(jnp.float32)
-    elif fl_cfg.policy == "psgf_topk":
-        # beyond-paper: magnitude-based masks — share where the server and its
-        # stale client copy disagree most (largest expected correction).
-        # Index-based top-k (not thresholding) so ties — e.g. the all-zero
-        # diff at round 1 — still select exactly k entries.
-        diff = jnp.abs(state["w_global"][None, :] - state["w_clients"])  # (K,D)
-        s_masks = _topk_mask(diff, max(1, int(D * fl_cfg.share_ratio)))
-        f_masks = _topk_mask(diff, max(1, int(D * fl_cfg.forward_ratio)))
-        gates = jnp.where(selected[:, None], s_masks, f_masks).astype(jnp.float32)
-    else:
-        raise ValueError(fl_cfg.policy)
-
-    if fl_cfg.comm_bits < 32:
-        # quantized downlink payload (beyond-paper): bf16-style round-trip
-        w_wire = state["w_global"].astype(jnp.bfloat16).astype(jnp.float32)
-    else:
-        w_wire = state["w_global"]
-
-    w_mixed = gates * w_wire[None, :] + (1.0 - gates) * state["w_clients"]
-    comm_down = state["comm_down"] + jnp.sum(gates)
-
-    # ---- LocalUpdate -------------------------------------------------------
-    if fl_cfg.policy == "online":
-        trains = selected  # unselected clients stay idle (paper §II.C)
-    else:
-        trains = jnp.ones((K,), bool)  # PSO/PSGF: everyone self-learns
-
-    local_keys = jax.random.split(k_local, K)
-    upd = jax.vmap(
-        lambda w, m, v, t, d, kk: _local_update(model_cfg, fl_cfg, meta, w, m, v, t, d, kk)
-    )(w_mixed, state["adam_m"], state["adam_v"], state["adam_t"], data, local_keys)
-    w_new, m_new, v_new, t_new, losses = upd
-
-    tr = trains[:, None].astype(jnp.float32)
-    w_clients = tr * w_new + (1 - tr) * w_mixed
-    adam_m = tr * m_new + (1 - tr) * state["adam_m"]
-    adam_v = tr * v_new + (1 - tr) * state["adam_v"]
-    adam_t = jnp.where(trains, t_new, state["adam_t"])
-
-    # ---- uplink + aggregation (eq. 5; eq. 3 when S' == I) ------------------
-    if fl_cfg.policy == "online":
-        up_masks = jnp.broadcast_to(selected[:, None], (K, D)).astype(jnp.float32)
-    elif fl_cfg.policy == "psgf_topk":
-        diff_up = jnp.abs(state["w_global"][None, :] - w_clients)
-        m_up = _topk_mask(diff_up, max(1, int(D * fl_cfg.share_ratio)))
-        up_masks = jnp.where(selected[:, None], m_up, False).astype(jnp.float32)
-    else:
-        up_masks = jnp.where(
-            selected[:, None], M.client_masks(k_upmask, K, D, fl_cfg.share_ratio), False
-        ).astype(jnp.float32)
-
-    if fl_cfg.comm_bits < 32:
-        w_clients_wire = w_clients.astype(jnp.bfloat16).astype(jnp.float32)
-    else:
-        w_clients_wire = w_clients
-
-    C = jnp.maximum(jnp.sum(selected), 1).astype(jnp.float32)
-    selected_f = selected[:, None].astype(jnp.float32)
-    contrib = up_masks * w_clients_wire + (selected_f - up_masks) * state["w_global"][None, :]
-    w_global = jnp.sum(contrib, axis=0) / C
-    comm_up = state["comm_up"] + jnp.sum(up_masks)
-
-    new_state = {
-        "w_global": w_global,
-        "w_clients": w_clients,
-        "adam_m": adam_m,
-        "adam_v": adam_v,
-        "adam_t": adam_t,
-        "round": state["round"] + 1,
-        "comm_down": comm_down,
-        "comm_up": comm_up,
-    }
-    metrics = {
-        "train_loss": jnp.sum(losses * trains) / jnp.maximum(jnp.sum(trains), 1),
-        "num_selected": jnp.sum(selected),
-        "comm_total": comm_down + comm_up,
-        "comm_bytes": (comm_down + comm_up) * (fl_cfg.comm_bits / 8.0),
-    }
-    return new_state, metrics
+    return _engine.fl_round(state, data, key, model_cfg, fl_cfg, meta)

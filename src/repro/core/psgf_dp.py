@@ -12,6 +12,15 @@ data-parallel steps (no cross-pod traffic), then one ``psgf_sync``:
   * every unselected pod receives a smaller *forwarded* leaf subset
     (forward_ratio) of the global model (paper eq. 6 — the PSGF idea).
 
+The traced sync path is now a thin wrapper over the unified FL engine:
+``psgf_sync`` == :func:`repro.core.fl.engine.sync_round` with the
+leaf-granularity :class:`repro.core.fl.policies.LeafPSGF` policy — the same
+gate/aggregate/distribute core that drives the paper-faithful element-space
+rounds (repro/core/fl/engine.py). Only the STATIC-schedule variant
+(:func:`psgf_sync_static`, python-bool gates, collective-free HLO for
+unshared leaves) keeps a bespoke implementation here, because its value is
+precisely that gating happens at trace time.
+
 Collective bytes scale with share_ratio/forward_ratio instead of full model
 size — the paper's Table II/III trade-off re-expressed as cross-pod bytes.
 Local params carry a leading pod axis sharded over the mesh "pod" axis, so
@@ -20,13 +29,15 @@ per-pod values differ; jnp means over that axis lower to pod-axis collectives.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.pytree_utils import tree_size_bytes
+from repro.core.fl import engine as E
+from repro.core.fl import policies as pol
+from repro.core.fl.masks import leaf_gates  # noqa: F401  (legacy location)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,85 +48,29 @@ class PSGFDPConfig:
     sync_interval: int = 8  # local steps between syncs (H)
 
 
-def leaf_gates(key, tree, ratio: float):
-    """Per-leaf Bernoulli(ratio) scalar gates (0./1.), jit-traceable.
-
-    Leaf granularity is the TPU-native analogue of the paper's diagonal S/F
-    matrices: whole leaves either cross the pod link or don't, so saved
-    elements are saved bytes on the wire.
-    """
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    gates = []
-    for i, _ in enumerate(leaves):
-        k = jax.random.fold_in(key, i)
-        gates.append((jax.random.uniform(k, ()) < ratio).astype(jnp.float32))
-    return jax.tree_util.tree_unflatten(treedef, gates)
-
-
-def gate_bytes(gates, tree) -> jnp.ndarray:
-    """Bytes selected by a gate tree (realized communication volume)."""
-    sizes = jax.tree_util.tree_map(
-        lambda x: jnp.asarray(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize, jnp.float32),
-        tree,
-    )
-    per_leaf = jax.tree_util.tree_map(lambda g, s: g * s, gates, sizes)
-    return sum(jax.tree_util.tree_leaves(per_leaf))
-
-
 def psgf_sync(local, global_, key, cfg: PSGFDPConfig, num_pods: int):
-    """One PSGF sync round.
+    """One PSGF sync round (thin wrapper over the engine's sync core).
 
     local  : pytree with leading pod axis (num_pods, ...), sharded over "pod".
     global_: replicated pytree (the "server" model).
     Returns (new_local, new_global, stats).
     """
-    k_sel, k_share, k_fwd = jax.random.split(key, 3)
-    c = max(1, int(round(num_pods * cfg.select_ratio)))
-    perm = jax.random.permutation(k_sel, num_pods)
-    selected = jnp.zeros((num_pods,), bool).at[perm[:c]].set(True)
-    sel_f = selected.astype(jnp.float32)
-
-    g_share = leaf_gates(k_share, global_, cfg.share_ratio)
-    g_fwd = leaf_gates(k_fwd, global_, cfg.forward_ratio)
-
-    def agg(leaf_local, leaf_global, gs):
-        # masked mean over selected pods -> the pod-axis collective
-        sel_shape = (num_pods,) + (1,) * (leaf_local.ndim - 1)
-        w = sel_f.reshape(sel_shape)
-        mean_sel = jnp.sum(leaf_local * w, axis=0) / c
-        return gs * mean_sel + (1.0 - gs) * leaf_global
-
-    new_global = jax.tree_util.tree_map(agg, local, global_, g_share)
-
-    def dist(leaf_local, leaf_global, gs, gf):
-        sel_shape = (num_pods,) + (1,) * (leaf_local.ndim - 1)
-        sel_b = selected.reshape(sel_shape)
-        # selected pods: receive the share-gated global (eq. 4)
-        recv_sel = gs * leaf_global[None] + (1.0 - gs) * leaf_local
-        # unselected pods: receive the forward-gated global (eq. 6)
-        recv_uns = gf * leaf_global[None] + (1.0 - gf) * leaf_local
-        return jnp.where(sel_b, recv_sel, recv_uns)
-
-    new_local = jax.tree_util.tree_map(
-        lambda ll, lg, gs, gf: dist(ll, lg, gs, gf), local, new_global, g_share, g_fwd
-    )
-
-    shared_bytes = gate_bytes(g_share, global_)
-    fwd_bytes = gate_bytes(g_fwd, global_)
-    stats = {
-        # up + down for selected pods, down-only for forwarded pods
-        "wire_bytes": shared_bytes * (2 * c) + fwd_bytes * (num_pods - c),
-        "num_selected": jnp.sum(selected),
-    }
-    return new_local, new_global, stats
+    leading = jax.tree_util.tree_leaves(local)[0].shape[0]
+    if num_pods != leading:
+        raise ValueError(
+            f"num_pods={num_pods} does not match local's pod axis ({leading})")
+    policy = pol.LeafPSGF(share_ratio=cfg.share_ratio,
+                          forward_ratio=cfg.forward_ratio)
+    return E.sync_round(local, global_, key, policy, cfg.select_ratio)
 
 
 def psgf_sync_static(local, global_, share_gates, fwd_gates, selected):
     """Static-schedule PSGF sync: gate decisions are PYTHON bools (host-
     sampled per round), so unshared leaves generate NO collective in the
     lowered HLO — the communication savings are visible in the compiled
-    program, not just in accounting. This is the production variant; the
-    traced-gate ``psgf_sync`` keeps the paper-faithful single-program
+    program, not just in accounting (asserted by tests/test_engine.py). This
+    is the production variant; the traced-gate ``psgf_sync`` (engine-backed,
+    see repro/core/fl/engine.py) keeps the paper-faithful single-program
     semantics for simulation.
 
     share_gates / fwd_gates: pytrees of python bools (same structure as

@@ -8,8 +8,14 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the installed jax supports
+    them (jax >= 0.5); older versions (0.4.x, the pinned CI toolchain) only
+    have Auto semantics, so plain make_mesh is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,11 +23,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     for the 2-pod = 512-chip deployment."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests/examples on CPU)."""
     n = len(jax.devices())
     model = min(model, n)
-    return jax.make_mesh((n // model, model), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((n // model, model), ("data", "model"))

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional-dep guard
 
 from repro.data.synthetic import ev_synthetic, nn5_synthetic, ett_like
 from repro.data.windowing import clean_clients, client_datasets, make_windows, split_windows

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional-dep guard
 
 from repro.core import forecast as F
 
@@ -89,9 +89,10 @@ def test_training_reduces_loss(rng_key):
     loss_fn = lambda p: F.mse_loss(cfg, p, x, y)
     l0 = float(loss_fn(params))
     grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    # lr 3e-3: raw SGD at 1e-2 diverges on this init (loss -> nan by step 8)
     for _ in range(60):
         l, g = grad_fn(params)
-        params = jax.tree_util.tree_map(lambda p, gg: p - 0.01 * gg, params, g)
+        params = jax.tree_util.tree_map(lambda p, gg: p - 0.003 * gg, params, g)
     assert float(l) < 0.5 * l0, (l0, float(l))
 
 
