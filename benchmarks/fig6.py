@@ -1,10 +1,11 @@
 """Fig. 6 analogue: communication-vs-loss trade-off curves per policy.
 
-Reads the table_nn5/table_ev results (benchmarks/table23.py, produced by the
-unified engine's scan driver — repro/core/fl/engine.py) and renders an ASCII
-scatter + checks the paper's headline claim: at parity RMSE, PSGF-Fed
-communicates >=25% less than PSO-Fed (we assert the Pareto-dominance
-direction on the synthetic data).
+Reads the table_nn5/table_ev results (benchmarks/table23.py — a thin caller
+over ``repro.core.tasks.run_experiment``) and renders an ASCII scatter +
+checks the paper's headline claim: at parity RMSE, PSGF-Fed communicates
+>=25% less than PSO-Fed (we assert the Pareto-dominance direction on the
+synthetic data). ``run(which, rows=...)`` also accepts ``run_experiment``
+rows directly, skipping the results-file round-trip.
 """
 from __future__ import annotations
 
@@ -41,12 +42,13 @@ def ascii_scatter(rows, width=60, height=14):
     return "\n".join(lines)
 
 
-def run(which: str = "nn5"):
-    path = os.path.join(EXP_DIR, f"table_{which}", "results.json")
-    if not os.path.exists(path):
-        print(f"fig6: no results for {which}; run benchmarks.table23 first")
-        return None
-    rows = json.load(open(path))["rows"]
+def run(which: str = "nn5", rows=None):
+    if rows is None:
+        path = os.path.join(EXP_DIR, f"table_{which}", "results.json")
+        if not os.path.exists(path):
+            print(f"fig6: no results for {which}; run benchmarks.table23 first")
+            return None
+        rows = json.load(open(path))["rows"]
     if not rows:
         print(f"fig6: empty results for {which}")
         return None

@@ -26,17 +26,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import forecast as F
 from repro.core.fl.engine import FLConfig, run_fl
-from repro.data.synthetic import nn5_synthetic
-from repro.data.windowing import client_datasets
+from repro.core.forecaster import get_forecaster
+from repro.core.tasks import get_task
 
 from benchmarks.common import save_json
 
 
 def _data(num_clients: int, look_back: int, horizon: int, num_days: int = 40):
-    series = nn5_synthetic(seed=0, num_clients=num_clients, num_days=num_days)
-    tr, va, te, _ = client_datasets(series, look_back, horizon)
+    task = get_task("nn5", seed=0, num_clients=num_clients, num_days=num_days,
+                    look_back=look_back, horizon=horizon)
+    tr, va, te, _ = task.client_data(task.series())
     return jnp.asarray(tr), jnp.asarray(te)
 
 
@@ -57,8 +57,9 @@ def _time_driver(model_cfg, fl_cfg, tr, te, rounds: int, driver: str,
 def bench_driver(rounds: int = 50, reps: int = 3):
     """Loop vs scan on a dispatch-bound micro-model (the regime where the
     per-round host round-trip is the cost, not the local math)."""
-    model_cfg = F.ForecastConfig(look_back=8, horizon=1, d_model=8, num_heads=2,
-                                 d_ff=8, patch_len=4, stride=4, mixers=("id",))
+    model_cfg = get_forecaster(
+        "idformer", look_back=8, horizon=1, d_model=8, num_heads=2, d_ff=8,
+        patch_len=4, stride=4, mixers=("id",)).cfg
     fl_cfg = FLConfig(policy="psgf", num_clients=4, local_steps=1, batch_size=2)
     tr, te = _data(4, 8, 1)
 
@@ -85,8 +86,8 @@ def bench_scaling(num_clients: int = 512, client_chunk: int = 64,
                   rounds: int = 3):
     """num_clients >> paper scale via chunked vmap (client_chunk bounds live
     activations; without it the vmapped LocalUpdate replicates all K)."""
-    model_cfg = F.logtst_config(look_back=16, horizon=2, d_model=8, num_heads=2,
-                                d_ff=16, patch_len=8, stride=4)
+    model_cfg = get_forecaster("logtst", look_back=16, horizon=2, d_model=8,
+                               num_heads=2, d_ff=16, patch_len=8, stride=4).cfg
     fl_cfg = FLConfig(policy="psgf", num_clients=num_clients, local_steps=1,
                       batch_size=4, client_chunk=client_chunk)
     tr, te = _data(num_clients, 16, 2, num_days=60)

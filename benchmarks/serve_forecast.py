@@ -1,0 +1,104 @@
+"""Forecast-serving benchmark: checkpoint-restored, jitted, bucketed batch
+inference (repro/launch/serve_forecast.py).
+
+Trains a quick-preset global model through ``run_experiment`` (the same path
+the paper's FL experiments use), checkpoints it, RESTORES it via
+``load_forecaster``, then measures forecasts/sec through the serving stack:
+
+  * ``direct`` — pre-batched ragged requests through the bucketed/padded
+    jitted step (donated output buffers);
+  * ``queue``  — single-station requests coalesced by the micro-batching
+    worker (the ``submit() -> Future`` path).
+
+  PYTHONPATH=src python -m benchmarks.serve_forecast [--quick]
+
+Results -> experiments/serve_forecast/results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.forecaster import load_forecaster
+from repro.core.tasks import ExperimentSpec, get_task, run_experiment, task_forecaster
+from repro.launch.serve_forecast import ForecastServer, serve_requests
+
+from benchmarks.common import save_json
+
+
+def train_checkpoint(ckpt_dir: str, quick: bool = True) -> str:
+    """Train one quick global model on the EV task and checkpoint it."""
+    task = get_task("ev", quick=True,
+                    num_clients=12 if quick else 24,
+                    num_days=200 if quick else 300)
+    model = task_forecaster(task, "logtst", quick=True)
+    spec = ExperimentSpec(task=task, model=model, grid=(("psgf", {}),),
+                          local_steps=2, batch_size=16,
+                          max_rounds=4 if quick else 40,
+                          patience=50, eval_every=4 if quick else 20)
+    res = run_experiment(spec, checkpoint_dir=ckpt_dir)
+    row = res["rows"][0]
+    print(f"serve_forecast,train,rmse={row['rmse']:.4f},"
+          f"rounds={row['rounds']}", flush=True)
+    return os.path.join(ckpt_dir, row["policy"])
+
+
+def bench_ragged_direct(server: ForecastServer, channels: int, seed: int = 0,
+                        reps: int = 200) -> dict:
+    """Ragged batch sizes (1..max_batch) through the bucketed step."""
+    rng = np.random.default_rng(seed)
+    L = server.forecaster.cfg.look_back
+    sizes = rng.integers(1, server.max_batch + 1, size=reps)
+    batches = [rng.standard_normal((b, channels, L)).astype(np.float32)
+               for b in sizes]
+    server.warmup(channels)
+    base = dict(server.stats)  # exclude warmup batches from the report
+    t0 = time.perf_counter()
+    for x in batches:
+        server.predict(x)
+    secs = time.perf_counter() - t0
+    n = int(sizes.sum()) * channels
+    return {"mode": "direct_ragged", "requests": int(sizes.sum()),
+            "channels": channels, "seconds": secs,
+            "forecasts_per_sec": n / secs,
+            "padded_slots": server.stats["padded_slots"] - base["padded_slots"],
+            "batches": server.stats["batches"] - base["batches"]}
+
+
+def run(quick: bool = True):
+    results = {}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = train_checkpoint(d, quick=quick)
+        fc, params, extra = load_forecaster(ckpt)
+        results["checkpoint"] = {"model": fc.name,
+                                 "num_params": fc.num_params(),
+                                 "train_rmse": extra["final_rmse"]}
+        server = ForecastServer(fc, params, max_batch=16 if quick else 64)
+        results["direct"] = bench_ragged_direct(
+            server, channels=3, reps=50 if quick else 400)
+        print(f"serve_forecast,direct,"
+              f"{results['direct']['forecasts_per_sec']:.0f} forecasts/s,"
+              f"padded={results['direct']['padded_slots']}", flush=True)
+
+        qserver = ForecastServer(fc, params, max_batch=16 if quick else 64,
+                                 max_wait_ms=1.0)
+        results["queue"] = serve_requests(
+            qserver, requests=128 if quick else 2048, channels=3)
+        print(f"serve_forecast,queue,"
+              f"{results['queue']['forecasts_per_sec']:.0f} forecasts/s,"
+              f"{results['queue']['batches']} batches", flush=True)
+
+    save_json("serve_forecast", "results", results)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny train run + fewer requests")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -1,5 +1,6 @@
 """Tables II & III analogues: FL policies (Online-Fed / PSO-Fed / PSGF-Fed)
-on NN5-like (Table II) and EV-like (Table III) synthetic data.
+on NN5-like (Table II) and EV-like (Table III) synthetic data — a thin caller
+over the Forecaster/ExperimentSpec API (repro/core/tasks.py).
 
 Grid mirrors the paper: select_ratio 50% everywhere; PSO share ratios
 {50,40,30,20}%; PSGF with forward_ratio {20,30}% x share {50,40,30,20}%.
@@ -8,53 +9,14 @@ trade-off curve is derived from these rows (benchmarks/fig6.py).
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import forecast as F
-from repro.core.fl.engine import FLConfig, run_fl
-from repro.data.synthetic import ev_synthetic, nn5_synthetic
-from repro.data.windowing import client_datasets
-from repro.data.clustering import cluster_clients
+from repro.core.tasks import ExperimentSpec, get_task, run_experiment, task_forecaster
 
 from benchmarks.common import save_json
 
 
-def _dataset(which: str, look_back: int, horizon: int, quick: bool):
-    if which == "nn5":
-        series = nn5_synthetic(seed=1, num_clients=24 if quick else 64,
-                               num_days=400 if quick else 735)
-    else:
-        series = ev_synthetic(seed=0, num_clients=24 if quick else 58,
-                              num_days=300 if quick else 420)
-    tr, va, te, info = client_datasets(series, look_back, horizon)
-    return jnp.asarray(tr), jnp.asarray(te), info
-
-
-def _model_cfg(quick: bool, horizon: int):
-    if quick:
-        return F.logtst_config(look_back=64, horizon=horizon, d_model=32,
-                               num_heads=4, d_ff=64)
-    return F.logtst_config(look_back=128, horizon=horizon)
-
-
 def run(which: str = "nn5", quick: bool = True):
-    horizon = 4 if which == "nn5" else 2  # paper §III.B.2
-    look_back = 64 if quick else 128
-    train, test, info = _dataset(which, look_back, horizon, quick)
-    K = train.shape[0]
-    model_cfg = _model_cfg(quick, horizon)
-    # early stopping is essential: the paper's PSGF advantage is FASTER
-    # CONVERGENCE (all clients train every round), which converts to lower
-    # cumulative comm only when runs stop at convergence, not at a fixed round.
-    # The engine's scan driver checks patience at eval_every-round chunk
-    # boundaries, so eval_every bounds how far a run can overshoot.
-    max_rounds = 120 if quick else 300
-    patience = 8 if quick else 10
-    eval_every = 20
+    task = get_task(which, quick=quick)  # paper horizons: nn5 4, ev 2 (§III.B.2)
+    model = task_forecaster(task, "logtst", quick=quick)
 
     grid = [("online", dict())]
     shares = [0.5, 0.3] if quick else [0.5, 0.4, 0.3, 0.2]
@@ -67,60 +29,55 @@ def run(which: str = "nn5", quick: bool = True):
     # beyond-paper: magnitude-based masks
     grid.append(("psgf_topk", dict(share_ratio=0.3, forward_ratio=0.2)))
 
+    # early stopping is essential: the paper's PSGF advantage is FASTER
+    # CONVERGENCE (all clients train every round), which converts to lower
+    # cumulative comm only when runs stop at convergence, not at a fixed round.
+    # The engine's scan driver checks patience at eval_every-round chunk
+    # boundaries, so eval_every bounds how far a run can overshoot.
+    spec = ExperimentSpec(
+        task=task, model=model, grid=tuple(grid), select_ratio=0.5,
+        local_steps=4, batch_size=16 if quick else 32,
+        max_rounds=120 if quick else 300, patience=8 if quick else 10,
+        eval_every=20)
+
     rows = []
-    for policy, kw in grid:
-        fl_cfg = FLConfig(policy=policy, num_clients=K, select_ratio=0.5,
-                          local_steps=4,
-                          batch_size=16 if quick else 32, **kw)
-        t0 = time.time()
-        hist = run_fl(model_cfg, fl_cfg, train, test, jax.random.PRNGKey(0),
-                      max_rounds=max_rounds, patience=patience,
-                      eval_every=eval_every)
-        name = policy
-        if policy != "online":
-            name += f"-s{int(kw.get('share_ratio', 0) * 100)}"
-        if policy == "psgf":
-            name += f"-f{int(kw.get('forward_ratio', 0) * 100)}"
-        rows.append({
-            "dataset": which, "policy": name,
-            "comm_params": hist["final_comm"],
-            "rmse": round(hist["final_rmse"], 4),
-            "rounds": hist["rounds_run"],
-            "train_s": round(time.time() - t0, 1),
-        })
-        print(f"table_{which},{name},comm={hist['final_comm']:.3e},"
-              f"rmse={hist['final_rmse']:.4f},rounds={hist['rounds_run']}",
-              flush=True)
+
+    def on_row(r):
+        row = {"dataset": which, "policy": r["policy"],
+               "comm_params": r["comm_params"], "rmse": round(r["rmse"], 4),
+               "rounds": r["rounds"], "train_s": r["train_s"]}
+        rows.append(row)
+        print(f"table_{which},{row['policy']},comm={row['comm_params']:.3e},"
+              f"rmse={row['rmse']:.4f},rounds={row['rounds']}", flush=True)
+
+    run_experiment(spec, on_row=on_row)
     save_json(f"table_{which}", "results", {"rows": rows})
     return rows
 
 
 def run_clustered(which: str = "ev", k: int = 3, quick: bool = True):
     """Paper setting: DTW K-means clusters, FL independent per cluster."""
-    horizon = 2
-    look_back = 64 if quick else 128
-    if which == "ev":
-        series = ev_synthetic(seed=0, num_clients=24 if quick else 58)
-    else:
-        series = nn5_synthetic(seed=1, num_clients=24 if quick else 64)
-    labels, med = cluster_clients(series, k)
-    model_cfg = _model_cfg(quick, horizon)
+    # pre-API geometry: cluster runs kept the generators' full num_days and a
+    # fixed horizon-2 target for both datasets
+    task = get_task(which, quick=quick, clusters=k, horizon=2,
+                    num_days=420 if which == "ev" else 735,
+                    min_cluster_clients=2)
+    model = task_forecaster(task, "logtst", quick=quick)
+    spec = ExperimentSpec(
+        task=task, model=model, grid=(("psgf", {}),), local_steps=2,
+        batch_size=16, max_rounds=30 if quick else 200, patience=30,
+        eval_every=30)
+
     rows = []
-    for c in range(k):
-        idx = np.nonzero(labels == c)[0]
-        if len(idx) < 2:
-            continue
-        tr, va, te, _ = client_datasets(series[idx], look_back, horizon)
-        fl_cfg = FLConfig(policy="psgf", num_clients=tr.shape[0], local_steps=2,
-                          batch_size=16)
-        hist = run_fl(model_cfg, fl_cfg, jnp.asarray(tr), jnp.asarray(te),
-                      jax.random.PRNGKey(c), max_rounds=30 if quick else 200,
-                      patience=30, eval_every=30)
-        rows.append({"cluster": int(c), "clients": int(tr.shape[0]),
-                     "rmse": round(hist["final_rmse"], 4),
-                     "comm": hist["final_comm"]})
-        print(f"cluster{c},clients={tr.shape[0]},rmse={hist['final_rmse']:.4f}",
-              flush=True)
+
+    def on_row(r):
+        row = {"cluster": int(r["cluster"]), "clients": r["clients"],
+               "rmse": round(r["rmse"], 4), "comm": r["comm_params"]}
+        rows.append(row)
+        print(f"cluster{r['cluster']},clients={r['clients']},"
+              f"rmse={row['rmse']:.4f}", flush=True)
+
+    run_experiment(spec, on_row=on_row)
     save_json(f"table_{which}", "clustered", {"rows": rows})
     return rows
 

@@ -1,73 +1,71 @@
-"""End-to-end driver (deliverable b): the paper's full system.
+"""End-to-end driver (deliverable b): the paper's full system, expressed
+through the Forecaster/ExperimentSpec API.
 
 Pipeline (paper §III.B): synthetic UK-EV-like data -> station cleaning ->
 DTW K-means clustering -> per-cluster federated training of LoGTST under
-Online-Fed / PSO-Fed / PSGF-Fed for a few hundred rounds -> RMSE + cumulative
-communication report (Tables II/III analogue).
+Online-Fed / PSO-Fed / PSGF-Fed -> RMSE + cumulative communication report
+(Tables II/III analogue). With ``--ckpt-dir`` every trained global model is
+written in ``load_forecaster`` format, ready for
+``python -m repro.launch.serve_forecast``.
 
   PYTHONPATH=src python examples/federated_ev.py [--rounds 200] [--clusters 3]
+  PYTHONPATH=src python examples/federated_ev.py --small --rounds 20   # CI smoke
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import forecast as F
-from repro.core.fl.engine import FLConfig, run_fl
-from repro.data.clustering import cluster_clients
-from repro.data.synthetic import ev_synthetic
-from repro.data.windowing import client_datasets
+from repro.core.tasks import ExperimentSpec, get_task, run_experiment, task_forecaster
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=150)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="max FL rounds (default: 150, or 30 with --small)")
     ap.add_argument("--clusters", type=int, default=3)
     ap.add_argument("--clients", type=int, default=58)
     ap.add_argument("--small", action="store_true",
-                    help="small model + fewer rounds for a fast demo")
+                    help="quick preset: small model + fewer rounds for a fast demo")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="write per-(policy, cluster) global-model checkpoints")
     args = ap.parse_args()
+    rounds = args.rounds if args.rounds is not None else (30 if args.small else 150)
 
-    look_back, horizon = (64, 2) if args.small else (128, 2)
-    series = ev_synthetic(seed=0, num_clients=args.clients)
+    # quick preset swaps in look_back 64 + the d_model-32 model; data geometry
+    # (num_days 420, --clients stations) matches the paper-sized task
+    task = get_task("ev", quick=args.small, clusters=args.clusters,
+                    num_clients=args.clients, num_days=420,
+                    min_cluster_clients=4)
+    series = task.series()
     print(f"1) generated EV-like data for {args.clients} charging stations")
-
-    labels, medoids = cluster_clients(series, args.clusters)
+    labels = task.cluster_labels(series)
     print(f"2) DTW K-means -> cluster sizes: {np.bincount(labels).tolist()}")
 
-    if args.small:
-        model_cfg = F.logtst_config(look_back=look_back, horizon=horizon,
-                                    d_model=32, num_heads=4, d_ff=64)
-    else:
-        model_cfg = F.logtst_config(look_back=look_back, horizon=horizon)
-    print(f"3) model: {model_cfg.name}, {F.num_params(model_cfg):,} params")
+    model = task_forecaster(task, "logtst", quick=args.small)
+    print(f"3) model: {model.name}, {model.num_params():,} params")
 
-    policies = [
+    grid = (
         ("online", {}),
         ("pso", dict(share_ratio=0.3)),
         ("psgf", dict(share_ratio=0.3, forward_ratio=0.2)),
-    ]
-    print(f"4) federated training per cluster, {args.rounds} max rounds")
-    report = []
-    for policy, kw in policies:
-        tot_comm, rmses = 0.0, []
-        for c in range(args.clusters):
-            idx = np.nonzero(labels == c)[0]
-            if len(idx) < 4:
-                continue
-            tr, va, te, _ = client_datasets(series[idx], look_back, horizon)
-            fl_cfg = FLConfig(policy=policy, num_clients=tr.shape[0],
-                              select_ratio=0.5, local_steps=4, batch_size=32, **kw)
-            # scan driver: patience is checked at eval_every-round boundaries
-            hist = run_fl(model_cfg, fl_cfg, jnp.asarray(tr), jnp.asarray(te),
-                          jax.random.PRNGKey(c), max_rounds=args.rounds,
+    )
+    print(f"4) federated training per cluster, {rounds} max rounds")
+    # scan driver: patience is checked at eval_every-round boundaries
+    spec = ExperimentSpec(task=task, model=model, grid=grid, select_ratio=0.5,
+                          local_steps=4, batch_size=32, max_rounds=rounds,
                           patience=10, eval_every=25)
-            tot_comm += hist["final_comm"]
-            rmses.append(hist["final_rmse"])
-            print(f"   {policy:7s} cluster {c}: rounds {hist['rounds_run']:4d} "
-                  f"rmse {hist['final_rmse']:.4f} comm {hist['final_comm']:.2e}")
-        report.append((policy, float(np.mean(rmses)), tot_comm))
+    res = run_experiment(
+        spec, checkpoint_dir=args.ckpt_dir, series=series, labels=labels,
+        on_row=lambda r: print(
+            f"   {r['policy'].split('-')[0]:7s} cluster {r['cluster']}: "
+            f"rounds {r['rounds']:4d} rmse {r['rmse']:.4f} "
+            f"comm {r['comm_params']:.2e}"))
+
+    report = []
+    for policy, _ in grid:
+        rows = [r for r in res["rows"] if r["policy"].split("-")[0] == policy]
+        report.append((policy, float(np.mean([r["rmse"] for r in rows])),
+                       sum(r["comm_params"] for r in rows)))
 
     print("\n== summary (Tables II/III analogue) ==")
     print(f"{'policy':10s} {'RMSE':>8s} {'#Params (Comm.)':>16s}")

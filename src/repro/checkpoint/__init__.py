@@ -1,1 +1,1 @@
-from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step, read_manifest

@@ -46,13 +46,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -
 
 def load_checkpoint(ckpt_dir: str, template, step: int | None = None):
     """Restore into the structure of ``template``. Returns (tree, extra)."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    step, manifest = read_manifest(ckpt_dir, step)
     step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(step_dir, "manifest.json")) as f:
-        manifest = json.load(f)
     payload = np.load(os.path.join(step_dir, "arrays.npz"))
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
@@ -65,6 +60,19 @@ def load_checkpoint(ckpt_dir: str, template, step: int | None = None):
         assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+def read_manifest(ckpt_dir: str, step: int | None = None):
+    """Read a step's manifest without touching the payload. Returns
+    ``(step, manifest)``; lets callers rebuild a template (e.g. a model config
+    stashed in ``extra``) before calling :func:`load_checkpoint`."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        return step, json.load(f)
 
 
 def latest_step(ckpt_dir: str):

@@ -1,3 +1,20 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core.forecaster import (
+    Forecaster,
+    forecaster_names,
+    get_forecaster,
+    load_forecaster,
+    register_forecaster,
+    save_forecaster,
+)
+from repro.core.tasks import (
+    ExperimentSpec,
+    ForecastTask,
+    get_task,
+    register_task,
+    run_experiment,
+    task_forecaster,
+    task_names,
+)

@@ -397,6 +397,7 @@ def run_fl(
     driver: str = "scan",
     policy=None,
     shard_clients: bool = False,
+    checkpoint_dir: Optional[str] = None,
 ):
     """Multi-round FL driver. Returns a history dict with per-round loss,
     cumulative comm, and final RMSE.
@@ -409,6 +410,10 @@ def run_fl(
     ``eval_every - 1``. ``driver="loop"`` is the legacy per-round Python loop
     (one dispatch + host sync per round), kept for A/B benchmarking
     (benchmarks/fl_rounds.py).
+
+    ``checkpoint_dir`` persists the final GLOBAL model (params + config) via
+    :func:`repro.core.forecaster.save_forecaster`, restorable by
+    ``load_forecaster`` / ``repro.launch.serve_forecast``.
     """
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
@@ -484,4 +489,15 @@ def run_fl(
     history["rounds_run"] = len(history["round"])
     history["state"] = state
     history["meta"] = meta
+    if checkpoint_dir is not None:
+        # persist the trained GLOBAL model in load_forecaster format — the
+        # deployable artifact the serving path (launch/serve_forecast) restores
+        from repro.core.forecaster import Forecaster, save_forecaster
+
+        params = tree_unflatten_from_vector(state["w_global"], meta)
+        history["checkpoint"] = save_forecaster(
+            checkpoint_dir, Forecaster(model_cfg), params,
+            step=history["rounds_run"],
+            extra={"final_rmse": final_rmse, "final_comm": comm_total,
+                   "policy": fl_cfg.policy, "num_clients": fl_cfg.num_clients})
     return history

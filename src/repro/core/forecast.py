@@ -95,10 +95,18 @@ def revin_norm(params, x, eps: float = 1e-5):
 
 
 def revin_denorm(params, y, stats, eps: float = 1e-5):
+    """Exact inverse of the affine step of :func:`revin_norm`.
+
+    Divides by ``affine_w`` itself whenever it is nonzero (the earlier
+    ``max(|w|, eps) * sign(w)`` clamp was off by ``eps/|w|`` for
+    ``0 < |w| < eps`` and collapsed every prediction to the series mean at
+    ``w == 0``, where ``sign`` is 0). Only ``w == 0`` — where the forward
+    affine destroys the signal — falls back to ``eps``.
+    """
     mean, std = stats
-    x = (y - params["affine_b"]) / jnp.maximum(jnp.abs(params["affine_w"]), eps) * jnp.sign(
-        params["affine_w"]
-    )
+    w = params["affine_w"]
+    safe_w = jnp.where(w == 0.0, eps, w)
+    x = (y - params["affine_b"]) / safe_w
     return x * std + mean
 
 

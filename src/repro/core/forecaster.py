@@ -1,0 +1,145 @@
+"""Forecaster: ONE facade + name registry over the paper's forecasting models.
+
+Mirrors :class:`repro.launch.api.ModelApi` for the forecasting stack: a frozen
+wrapper around :class:`repro.core.forecast.ForecastConfig` exposing
+``init_params`` / ``abstract_params`` / ``param_axes`` / ``forward`` /
+``forward_multivariate`` / ``loss_fn`` / ``num_params``, each a direct
+delegation to the free functions in :mod:`repro.core.forecast` (bit-identity
+is guarded by tests/test_forecaster_api.py).
+
+The registry maps the paper's architecture names to configs:
+
+    fc = get_forecaster("logtst", look_back=64, horizon=2)
+    params = fc.init_params(jax.random.PRNGKey(0))
+    pred = fc.forward(params, x)                   # (B, L) -> (B, T)
+
+``get_forecaster`` also accepts the derived ``cfg.name`` spelling
+(``"logtst/15"``, ``"patchtst/63"``) so a config round-trips through its own
+name: ``get_forecaster(fc.cfg.name).cfg == fc.cfg`` (with the same overrides).
+
+Checkpoint interop (the FL -> serving hand-off): :func:`save_forecaster`
+writes params + the full config into a ``repro.checkpoint`` step directory,
+and :func:`load_forecaster` restores ``(Forecaster, params, extra)`` from the
+manifest alone — no template or config needed at the restore site
+(``repro.launch.serve_forecast`` builds its serving endpoint from exactly
+this).
+
+CLI surfaces over this module:
+
+  PYTHONPATH=src python -m repro.core.tasks --task ev --quick          # train
+  PYTHONPATH=src python -m repro.launch.serve_forecast --ckpt-dir CKPT # serve
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+from repro.core import forecast
+from repro.models import spec as S
+
+
+@dataclasses.dataclass(frozen=True)
+class Forecaster:
+    """Facade over ``ForecastConfig``; every method delegates to
+    ``repro.core.forecast`` so the facade and the free functions can never
+    drift."""
+
+    cfg: forecast.ForecastConfig
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+    # --- params ------------------------------------------------------------
+    def init_params(self, key):
+        return forecast.init_params(self.cfg, key)
+
+    def abstract_params(self):
+        return S.abstract_params(forecast.model_spec(self.cfg))
+
+    def param_axes(self):
+        return S.axes_tree(forecast.model_spec(self.cfg))
+
+    def num_params(self) -> int:
+        return forecast.num_params(self.cfg)
+
+    # --- steps -------------------------------------------------------------
+    def forward(self, params, x):
+        """x: (B, L) -> (B, T)."""
+        return forecast.forward(self.cfg, params, x)
+
+    def forward_multivariate(self, params, x):
+        """x: (B, M, L) -> (B, M, T); channel-independent shared weights."""
+        return forecast.forward_multivariate(self.cfg, params, x)
+
+    def loss_fn(self, params, x, y):
+        return forecast.mse_loss(self.cfg, params, x, y)
+
+
+_REGISTRY: Dict[str, Callable[..., forecast.ForecastConfig]] = {
+    "logtst": forecast.logtst_config,
+    "patchtst": forecast.patchtst_config,
+    "mlpformer": forecast.mlpformer_config,
+    "idformer": forecast.idformer_config,
+}
+
+
+def register_forecaster(name: str, config_fn: Callable[..., forecast.ForecastConfig]):
+    """Add an architecture to the registry (e.g. a custom mixer stack)."""
+    _REGISTRY[name] = config_fn
+
+
+def forecaster_names():
+    return sorted(_REGISTRY)
+
+
+def get_forecaster(name, **overrides) -> Forecaster:
+    """Resolve a Forecaster by registry name, derived ``cfg.name`` (the
+    ``"logtst/15"`` spelling — the ``/N`` token-count suffix is derived from
+    look_back/patch/stride and is ignored), or an existing ``ForecastConfig``.
+    """
+    if isinstance(name, forecast.ForecastConfig):
+        cfg = dataclasses.replace(name, **overrides) if overrides else name
+        return Forecaster(cfg)
+    base = str(name).split("/")[0]
+    if base not in _REGISTRY:
+        raise KeyError(
+            f"unknown forecaster {name!r}; known: {forecaster_names()}")
+    if "mixers" in overrides:
+        # an explicit mixer stack overrides the registry's preset stack but
+        # keeps the registered fn's other defaults (the builtin config fns
+        # own the mixers kwarg, so apply it via replace, not passthrough)
+        overrides = dict(overrides)
+        mixers = overrides.pop("mixers")
+        return Forecaster(dataclasses.replace(_REGISTRY[base](**overrides),
+                                              mixers=tuple(mixers)))
+    return Forecaster(_REGISTRY[base](**overrides))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint interop (FL training -> serving)
+# ---------------------------------------------------------------------------
+
+
+def save_forecaster(ckpt_dir: str, forecaster: Forecaster, params, step: int = 0,
+                    extra: dict | None = None) -> str:
+    """Write params + the full ForecastConfig into a checkpoint step dir."""
+    from repro.checkpoint import save_checkpoint
+
+    meta = dict(extra or {})
+    meta["forecast_config"] = dataclasses.asdict(forecaster.cfg)
+    return save_checkpoint(ckpt_dir, step, {"params": params}, extra=meta)
+
+
+def load_forecaster(ckpt_dir: str, step: int | None = None):
+    """Restore ``(Forecaster, params, extra)`` from a checkpoint written by
+    :func:`save_forecaster` (or ``run_fl(checkpoint_dir=...)``)."""
+    from repro.checkpoint import load_checkpoint, read_manifest
+
+    step, manifest = read_manifest(ckpt_dir, step)
+    cfg_dict = dict(manifest["extra"]["forecast_config"])
+    cfg_dict["mixers"] = tuple(cfg_dict["mixers"])  # json round-trips as list
+    fc = Forecaster(forecast.ForecastConfig(**cfg_dict))
+    tree, extra = load_checkpoint(ckpt_dir, {"params": fc.abstract_params()},
+                                  step=step)
+    return fc, tree["params"], extra

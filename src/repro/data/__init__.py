@@ -1,6 +1,7 @@
 from repro.data.synthetic import (
     ev_synthetic,
     nn5_synthetic,
+    household_synthetic,
     ett_like,
     weather_like,
 )

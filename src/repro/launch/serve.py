@@ -74,7 +74,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction: plain store_true with default=True made full
+    # (non-reduced) configs unreachable from the CLI
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--sample", action="store_true")
     args = ap.parse_args()
     serve(args.arch, args.batch, args.prompt_len, args.gen, args.reduced,

@@ -1,0 +1,235 @@
+"""Forecast serving endpoint: restore a federated checkpoint and serve it.
+
+The deployable artifact of the paper's system is the trained GLOBAL
+forecaster (per cluster). ``run_fl(checkpoint_dir=...)`` /
+``run_experiment(checkpoint_dir=...)`` write it in ``load_forecaster`` format;
+this module turns that checkpoint into a batched inference endpoint:
+
+  * the step is a jitted ``forward_multivariate`` (one compile per shape
+    bucket) writing into a DONATED per-bucket output buffer — steady-state
+    serving allocates no fresh output arrays;
+  * ragged request batches are padded up to a small set of SHAPE BUCKETS
+    (powers of two up to ``max_batch``) so the jit cache stays bounded no
+    matter what batch sizes arrive;
+  * :meth:`ForecastServer.submit` feeds a MICRO-BATCHING queue: a worker
+    thread coalesces single-station requests for up to ``max_wait_ms`` (or
+    until ``max_batch``) and resolves each request's ``Future`` with its own
+    forecast row.
+
+CLI (restore + synthetic load, reports forecasts/sec):
+
+  PYTHONPATH=src python -m repro.launch.serve_forecast --ckpt-dir CKPT \
+      [--requests 256] [--channels 3] [--max-batch 32] [--no-queue]
+
+Benchmarked in ``benchmarks/serve_forecast.py``; demoed end-to-end (train ->
+checkpoint -> serve) in ``examples/serve_forecast_demo.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forecaster import Forecaster, load_forecaster
+
+_STOP = object()
+
+
+def batch_buckets(max_batch: int) -> Tuple[int, ...]:
+    """Powers of two up to (and always including) ``max_batch``."""
+    out = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+class ForecastServer:
+    """Batched, bucketed, micro-batching inference over one Forecaster."""
+
+    def __init__(self, forecaster: Forecaster, params,
+                 max_batch: int = 32,
+                 buckets: Optional[Sequence[int]] = None,
+                 max_wait_ms: float = 2.0):
+        self.forecaster = forecaster
+        self.params = jax.device_put(params)
+        self.buckets = tuple(sorted(set(buckets or batch_buckets(max_batch))))
+        self.max_batch = self.buckets[-1]
+        self.max_wait_ms = max_wait_ms
+        # (bucket, channels) -> donated output buffer; replaced on every step
+        self._out = {}
+        self._step = jax.jit(
+            lambda p, x, out: out.at[:].set(forecaster.forward_multivariate(p, x)),
+            donate_argnums=(2,))
+        self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
+                      "series_served": 0}
+        self._queue: "queue.Queue" = queue.Queue()
+        self._worker_thread: Optional[threading.Thread] = None
+
+    # --- bucketed batch inference -----------------------------------------
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _run_bucket(self, x: np.ndarray) -> np.ndarray:
+        """x: (b, M, L) with b <= max_batch. Pads to the bucket, runs the
+        donated-output step, unpads."""
+        b, M, L = x.shape
+        bucket = self.bucket_for(b)
+        if b < bucket:
+            x = np.concatenate(
+                [x, np.zeros((bucket - b, M, L), np.float32)], axis=0)
+        key = (bucket, M)
+        out = self._out.pop(key, None)
+        if out is None:
+            out = jnp.zeros((bucket, M, self.forecaster.cfg.horizon),
+                            jnp.float32)
+        out = self._step(self.params, jnp.asarray(x, jnp.float32), out)
+        # copy the live rows off the buffer BEFORE it is donated again
+        result = np.asarray(out[:b])
+        self._out[key] = out
+        self.stats["batches"] += 1
+        self.stats["padded_slots"] += bucket - b
+        self.stats["series_served"] += b * M
+        return result
+
+    def predict(self, x) -> np.ndarray:
+        """x: (b, M, L) for any b (chunked over max_batch) -> (b, M, T)."""
+        x = np.asarray(x, np.float32)
+        if x.ndim == 2:  # single request (M, L)
+            return self.predict(x[None])[0]
+        assert x.ndim == 3 and x.shape[-1] == self.forecaster.cfg.look_back, x.shape
+        outs = [self._run_bucket(x[i : i + self.max_batch])
+                for i in range(0, x.shape[0], self.max_batch)]
+        return outs[0] if len(outs) == 1 else np.concatenate(outs, axis=0)
+
+    def warmup(self, channels: int = 1, buckets: Optional[Sequence[int]] = None):
+        """Pre-compile the step for each bucket (compilation off the serving
+        path)."""
+        L = self.forecaster.cfg.look_back
+        for b in buckets or self.buckets:
+            self._run_bucket(np.zeros((b, channels, L), np.float32))
+
+    # --- micro-batching request queue -------------------------------------
+    def start(self):
+        """Spawn the coalescing worker; ``submit`` becomes non-blocking."""
+        if self._worker_thread is not None:
+            return
+        self._worker_thread = threading.Thread(target=self._worker, daemon=True)
+        self._worker_thread.start()
+
+    def submit(self, x) -> Future:
+        """Enqueue ONE request (M, L); resolves to its (M, T) forecast."""
+        fut: Future = Future()
+        self.stats["requests"] += 1
+        self._queue.put((np.asarray(x, np.float32), fut))
+        return fut
+
+    def stop(self):
+        if self._worker_thread is None:
+            return
+        self._queue.put(_STOP)
+        self._worker_thread.join()
+        self._worker_thread = None
+
+    def _worker(self):
+        while True:
+            item = self._queue.get()
+            if item is _STOP:
+                return
+            batch = [item]
+            deadline = time.perf_counter() + self.max_wait_ms / 1e3
+            stopping = False
+            while len(batch) < self.max_batch:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    break
+                try:
+                    nxt = self._queue.get(timeout=left)
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    stopping = True
+                    break
+                batch.append(nxt)
+            try:
+                ys = self.predict(np.stack([x for x, _ in batch]))
+                for (_, fut), y in zip(batch, ys):
+                    fut.set_result(y)
+            except Exception as exc:  # propagate to every waiter
+                for _, fut in batch:
+                    fut.set_exception(exc)
+            if stopping:
+                return
+
+
+def serve_requests(server: ForecastServer, requests: int, channels: int,
+                   seed: int = 0, use_queue: bool = True) -> dict:
+    """Push ``requests`` synthetic (M, L) queries through the server and
+    report wall time + forecasts/sec (a forecast = one series' horizon)."""
+    L = server.forecaster.cfg.look_back
+    rng = np.random.default_rng(seed)
+    xs = rng.standard_normal((requests, channels, L)).astype(np.float32)
+    server.warmup(channels)
+    base = dict(server.stats)  # exclude warmup batches from the report
+    t0 = time.perf_counter()
+    if use_queue:
+        server.start()
+        futs = [server.submit(x) for x in xs]
+        ys = [f.result(timeout=60) for f in futs]
+        server.stop()
+    else:
+        ys = list(server.predict(xs))
+    secs = time.perf_counter() - t0
+    assert len(ys) == requests and ys[0].shape == (
+        channels, server.forecaster.cfg.horizon)
+    return {
+        "requests": requests,
+        "channels": channels,
+        "seconds": secs,
+        "forecasts_per_sec": requests * channels / secs,
+        "batches": server.stats["batches"] - base["batches"],
+        "padded_slots": server.stats["padded_slots"] - base["padded_slots"],
+        "mode": "queue" if use_queue else "direct",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="restore an FL forecaster checkpoint and serve it")
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--step", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--channels", type=int, default=3)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--queue", action=argparse.BooleanOptionalAction,
+                    default=True, help="micro-batching queue vs direct batches")
+    args = ap.parse_args()
+
+    fc, params, extra = load_forecaster(args.ckpt_dir, step=args.step)
+    print(f"restored {fc.name} ({fc.num_params():,} params) "
+          f"from {args.ckpt_dir} extra={ {k: v for k, v in extra.items() if k != 'forecast_config'} }")
+    server = ForecastServer(fc, params, max_batch=args.max_batch,
+                            max_wait_ms=args.max_wait_ms)
+    rep = serve_requests(server, args.requests, args.channels,
+                         use_queue=args.queue)
+    print(f"served {rep['requests']} requests x {rep['channels']} series in "
+          f"{rep['seconds']:.3f}s -> {rep['forecasts_per_sec']:.0f} "
+          f"forecasts/s ({rep['batches']} batches, "
+          f"{rep['padded_slots']} padded slots, {rep['mode']})")
+
+
+if __name__ == "__main__":
+    main()

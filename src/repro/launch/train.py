@@ -147,8 +147,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false",
+                    help="alias for --no-reduced")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--sync", choices=["none", "psgf"], default="none",
                     help="psgf: pods train locally, partial-share every "

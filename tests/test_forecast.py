@@ -66,6 +66,38 @@ def test_revin_invertibility(mean, scale, seed):
     np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-3)
 
 
+def test_revin_denorm_exact_inverse_tiny_affine():
+    """Regression: the old ``max(|w|, eps) * sign(w)`` clamp was off by
+    ``eps/|w|`` for 0 < |w| < eps — the inverse must divide by w itself."""
+    key = jax.random.PRNGKey(0)
+    x = 3.0 + 2.0 * jax.random.normal(key, (4, 64))
+    # sub-eps weights pair with b=0: a large bias would drown w*z below
+    # float32 resolution in the FORWARD pass (catastrophic cancellation),
+    # which no inverse can undo
+    for w, b in ((1e-7, 0.0), (-1e-7, 0.0), (1e-3, 0.2), (-2.5, 0.2)):
+        params = {"affine_w": jnp.full((1,), w), "affine_b": jnp.full((1,), b)}
+        y, stats = F.revin_norm(params, x)
+        xr = F.revin_denorm(params, y, stats)
+        np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                                   rtol=1e-4, atol=1e-3)
+
+
+def test_revin_denorm_no_collapse_at_zero_affine():
+    """Regression: at affine_w == 0 the old ``jnp.sign`` path zeroed the
+    prediction, collapsing every forecast to the series mean. Distinct model
+    outputs must stay distinct (and finite) through denorm."""
+    params = {"affine_w": jnp.zeros((1,)), "affine_b": jnp.zeros((1,))}
+    stats = (jnp.full((2, 1), 5.0), jnp.full((2, 1), 2.0))
+    y1 = jnp.ones((2, 4))
+    y2 = 2.0 * jnp.ones((2, 4))
+    x1, x2 = F.revin_denorm(params, y1, stats), F.revin_denorm(params, y2, stats)
+    assert np.isfinite(np.asarray(x1)).all() and np.isfinite(np.asarray(x2)).all()
+    assert not np.allclose(np.asarray(x1), np.asarray(x2))
+    # and denorm of the (constant) forward output recovers the series mean
+    x0 = F.revin_denorm(params, jnp.zeros((2, 4)), stats)
+    np.testing.assert_allclose(np.asarray(x0), 5.0)
+
+
 def test_revin_scale_invariance(rng_key):
     """Predictions rescale with the input when affine params are identity."""
     cfg = F.logtst_config(look_back=64, horizon=2)
