@@ -1,25 +1,46 @@
-"""FL round-driver benchmark: legacy per-round Python loop vs the engine's
-chunked ``lax.scan`` driver (repro/core/fl/engine.py).
+"""FL round-driver benchmark: the engine's three drivers head-to-head
+(repro/core/fl/engine.py).
+
+Driver selection (``run_fl(driver=...)``), by how much of the run compiles
+into one dispatch:
+
+  * ``loop``  — one dispatch + two host syncs per round (the seed design);
+  * ``scan``  — ``eval_every`` rounds per dispatch, donated carry, host-side
+    convergence/patience + RMSE eval at every chunk boundary;
+  * ``while`` — the FULL run as ONE dispatch: a ``lax.while_loop`` over scan
+    chunks carries ``(best_loss, stall, stop)`` on-device and the per-chunk
+    RMSE is computed in-graph, so the host reads results back exactly once.
 
 Two measurements seed the perf trajectory of the round hot path:
 
-  * ``driver`` — rounds/sec of ``run_fl(driver="loop")`` (one dispatch + two
-    host syncs per round, the seed repo's design) vs ``run_fl(driver="scan")``
-    (``eval_every`` rounds per dispatch, donated carry, host sync per chunk)
-    on a dispatch-bound micro-model, 50 rounds. The two drivers are verified
-    to produce the SAME final RMSE (within 1e-5; round-by-round identical
-    math, bitwise-equal on the pinned CPU toolchain).
+  * ``driver`` — rounds/sec of each driver on a dispatch-bound micro-model
+    (50 rounds, ``eval_every=5`` so scan pays 10 host round-trips that the
+    while driver folds on-device). All drivers are verified to produce the
+    SAME final RMSE (within 1e-5; round-by-round identical math,
+    bitwise-equal on the pinned CPU toolchain). Each driver also reports its
+    measured host<->device transfer counts (``jax.transfer_guard("log")``
+    captured at the fd level — the guard logs from C++), the direct evidence
+    for the dispatch-count story. On the CPU backend device-to-host reads are
+    zero-copy and never logged (count 0 is expected); the host-to-device
+    count — scalars/operands shipped per dispatch — is the per-driver
+    round-trip proxy (~17x fewer for while than scan/loop).
   * ``scaling`` — wall time of a chunked-vmap round at num_clients=512
-    (``FLConfig.client_chunk``), the regime the scan driver + chunking are
-    for (paper uses 58 clients; related FL-for-EV work studies thousands).
+    (``FLConfig.client_chunk``), the regime the scan/while drivers + chunking
+    are for (paper uses 58 clients; related FL-for-EV work studies thousands).
 
   PYTHONPATH=src python -m benchmarks.fl_rounds [--quick]
+
+``--quick`` (the CI smoke) still covers ALL THREE drivers; it only trims
+repetitions and skips the 512-client scaling run.
 
 Results -> experiments/fl_rounds/results.json.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
+import tempfile
 import time
 
 import jax
@@ -32,6 +53,8 @@ from repro.core.tasks import get_task
 
 from benchmarks.common import save_json
 
+DRIVERS = ("loop", "scan", "while")
+
 
 def _data(num_clients: int, look_back: int, horizon: int, num_days: int = 40):
     task = get_task("nn5", seed=0, num_clients=num_clients, num_days=num_days,
@@ -40,23 +63,52 @@ def _data(num_clients: int, look_back: int, horizon: int, num_days: int = 40):
     return jnp.asarray(tr), jnp.asarray(te)
 
 
+def count_transfers(fn):
+    """Run ``fn()`` under ``jax.transfer_guard("log")`` and count the logged
+    host<->device transfers. The guard logs from C++ directly to fd 2, so the
+    capture has to happen at the file-descriptor level, not via python
+    logging."""
+    sys.stderr.flush()
+    saved = os.dup(2)
+    with tempfile.TemporaryFile(mode="w+") as tmp:
+        os.dup2(tmp.fileno(), 2)
+        try:
+            with jax.transfer_guard("log"):
+                out = fn()
+            jax.effects_barrier()
+        finally:
+            sys.stderr.flush()
+            os.dup2(saved, 2)
+            os.close(saved)
+        tmp.seek(0)
+        txt = tmp.read()
+    return out, {"host_to_device": txt.count("host-to-device transfer"),
+                 "device_to_host": txt.count("device-to-host transfer")}
+
+
 def _time_driver(model_cfg, fl_cfg, tr, te, rounds: int, driver: str,
-                 reps: int = 3):
-    """Best-of-reps wall time for a full run (compile excluded via warmup)."""
-    kw = dict(max_rounds=rounds, patience=rounds + 1, eval_every=rounds,
+                 eval_every: int, reps: int = 3):
+    """Best-of-reps wall time for a full run (compile excluded via warmup),
+    plus the transfer counts of one instrumented run."""
+    kw = dict(max_rounds=rounds, patience=rounds + 1, eval_every=eval_every,
               driver=driver)
-    hist = run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0), **kw)
+    run = lambda: run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0), **kw)
+    run()  # warmup/compile
+    hist, transfers = count_transfers(run)
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        hist = run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0), **kw)
+        hist = run()
         best = min(best, time.perf_counter() - t0)
-    return best, hist
+    return best, hist, transfers
 
 
-def bench_driver(rounds: int = 50, reps: int = 3):
-    """Loop vs scan on a dispatch-bound micro-model (the regime where the
-    per-round host round-trip is the cost, not the local math)."""
+def bench_driver(rounds: int = 50, reps: int = 3, eval_every: int = 5):
+    """loop vs scan vs while on a dispatch-bound micro-model (the regime where
+    the per-round/per-chunk host round-trip is the cost, not the local math).
+    ``eval_every=5`` keeps the convergence-check cadence realistic: scan pays
+    ``rounds / eval_every`` host syncs + eager RMSE evals that the while
+    driver folds into its single dispatch."""
     model_cfg = get_forecaster(
         "idformer", look_back=8, horizon=1, d_model=8, num_heads=2, d_ff=8,
         patch_len=4, stride=4, mixers=("id",)).cfg
@@ -64,21 +116,28 @@ def bench_driver(rounds: int = 50, reps: int = 3):
     tr, te = _data(4, 8, 1)
 
     out = {}
-    for driver in ("loop", "scan"):
-        secs, hist = _time_driver(model_cfg, fl_cfg, tr, te, rounds, driver,
-                                  reps)
+    for driver in DRIVERS:
+        secs, hist, transfers = _time_driver(model_cfg, fl_cfg, tr, te, rounds,
+                                             driver, eval_every, reps)
         out[driver] = {"seconds": secs, "rounds_per_sec": rounds / secs,
-                       "final_rmse": hist["final_rmse"]}
+                       "final_rmse": hist["final_rmse"],
+                       "transfers": transfers}
         print(f"fl_rounds,{driver},{rounds / secs:.1f} rounds/s,"
-              f"rmse={hist['final_rmse']:.6f}", flush=True)
+              f"rmse={hist['final_rmse']:.6f},"
+              f"d2h={transfers['device_to_host']},"
+              f"h2d={transfers['host_to_device']}", flush=True)
 
-    speedup = out["scan"]["rounds_per_sec"] / out["loop"]["rounds_per_sec"]
-    rmse_delta = abs(out["scan"]["final_rmse"] - out["loop"]["final_rmse"])
-    out["speedup_scan_over_loop"] = speedup
+    out["speedup_scan_over_loop"] = (out["scan"]["rounds_per_sec"]
+                                     / out["loop"]["rounds_per_sec"])
+    out["speedup_while_over_scan"] = (out["while"]["rounds_per_sec"]
+                                      / out["scan"]["rounds_per_sec"])
+    rmse_delta = max(abs(out[d]["final_rmse"] - out["loop"]["final_rmse"])
+                     for d in DRIVERS)
     out["rmse_delta"] = rmse_delta
-    print(f"fl_rounds,speedup,{speedup:.2f}x,rmse_delta={rmse_delta:.2e}",
-          flush=True)
-    assert rmse_delta < 1e-5, "drivers diverged — scan must reproduce the loop"
+    print(f"fl_rounds,speedup,scan/loop={out['speedup_scan_over_loop']:.2f}x,"
+          f"while/scan={out['speedup_while_over_scan']:.2f}x,"
+          f"rmse_delta={rmse_delta:.2e}", flush=True)
+    assert rmse_delta < 1e-5, "drivers diverged — all three must agree"
     return out
 
 
@@ -115,6 +174,7 @@ def run(quick: bool = True):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="driver A/B only (CI smoke); skips the 512-client run")
+                    help="driver A/B/C only (CI smoke; still covers loop, "
+                         "scan AND while); skips the 512-client run")
     args = ap.parse_args()
     run(quick=args.quick)

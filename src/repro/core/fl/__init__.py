@@ -6,6 +6,7 @@ from repro.core.fl.policies import (
     LeafPSGF, OnlineFed, PSGFFed, PSGFTopK, PSOFed, Policy, from_config,
 )
 from repro.core.fl.engine import (
-    ACCOUNTING_DTYPE, FLConfig, aggregate, evaluate_rmse, fl_round, gate_bytes,
-    gate_count, init_fl_state, mix_down, run_fl, shard_client_state, sync_round,
+    ACCOUNTING_DTYPE, FLConfig, aggregate, client_state_shardings,
+    evaluate_rmse, fl_round, gate_bytes, gate_count, init_fl_state, mix_down,
+    mix_down_count, run_fl, shard_client_state, sync_round,
 )

@@ -15,20 +15,33 @@ three primitives that work on any client-stacked pytree:
   * :func:`gate_count` / :func:`gate_bytes` — exact communication accounting
                          from the realized gates.
 
-Round driving is a chunked ``jax.lax.scan``: ``eval_every`` rounds compile
-into ONE dispatch with a donated carry, and the host only syncs (convergence /
-patience / RMSE eval) at chunk boundaries — no O(rounds) host round-trips.
+Round driving is compiled at three escalating levels (``run_fl(driver=...)``):
+``"loop"`` dispatches one round at a time (legacy A/B baseline); ``"scan"``
+compiles ``eval_every`` rounds per dispatch with a donated carry and host-syncs
+(convergence / patience / RMSE eval) at chunk boundaries; ``"while"`` moves the
+convergence check itself on-device — a ``lax.while_loop`` over scan chunks
+carrying ``(best_loss, stall, stop)`` — so a full ``max_rounds`` run is ONE
+dispatch with zero per-chunk host round-trips (per-round losses, cumulative
+comm and per-chunk RMSE land in preallocated device buffers read back once at
+the end). All three drivers run identical per-round math: same seed -> same
+per-round states (bitwise on the pinned CPU toolchain).
+
 Client state is a ``(K, D)`` matrix (plus Adam moments); ``FLConfig.
 client_chunk`` bounds how many clients are materialized per LocalUpdate step
 (chunked vmap via ``lax.map(batch_size=...)``) so ``num_clients=512+`` runs on
-a single host, and :func:`shard_client_state` lays the client axis out across
-local devices when more than one is available.
+a single host, and :func:`shard_client_state` / :func:`client_state_shardings`
+lay the client axis out across local devices — the while driver threads those
+shardings through ``in_shardings`` on its donated carry so the one-dispatch run
+stays client-sharded end-to-end. ``FLConfig.use_pallas_mix`` routes the
+element-granularity downlink mix through the fused ``psgf_mix`` Pallas kernel
+(mix + comm count in one pass over the mask; interpret-mode fallback off-TPU).
 
 Entry points:
   * :func:`fl_round` — one global iteration (flat client space);
   * :func:`run_fl`   — multi-round driver (``driver="scan"`` is the compiled
-                       default; ``driver="loop"`` keeps the legacy per-round
-                       Python loop for A/B benchmarking);
+                       default; ``driver="while"`` is the fully-compiled
+                       on-device early-stop variant; ``driver="loop"`` keeps
+                       the legacy per-round Python loop for A/B benchmarking);
   * :func:`sync_round` — the train-free gate/aggregate/distribute cycle used
                        by ``psgf_dp.psgf_sync`` at leaf granularity.
 """
@@ -77,10 +90,16 @@ class FLConfig:
     # comm_bits: payload precision on the wire (32 = paper; 16 = bf16-style
     # quantized exchange). Counted in metrics["comm_bytes"].
     comm_bits: int = 32
-    # client_chunk: upper bound on clients materialized per LocalUpdate step.
-    # None = plain vmap over all K clients (fine to ~100 clients); set to e.g.
-    # 64 to run num_clients=512+ without K-way replication of activations.
+    # client_chunk: upper bound on clients materialized per LocalUpdate step
+    # AND per evaluate_rmse forward. None = plain vmap over all K clients
+    # (fine to ~100 clients); set to e.g. 64 to run num_clients=512+ without
+    # K-way replication of activations.
     client_chunk: Optional[int] = None
+    # use_pallas_mix: route the element-granularity (K, D) downlink mix through
+    # the fused psgf_mix Pallas kernel (mix + comm count in ONE pass over the
+    # mask instead of separate mix_down + gate_count reductions). Falls back to
+    # interpret mode automatically off-TPU; bit-identical either way.
+    use_pallas_mix: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -108,13 +127,19 @@ def aggregate(client_tree, global_tree, up_gates, selected):
     selected client does NOT share contribute the server's own value, so the
     mean stays well-normalized at any gate density. With scalar per-leaf
     gates this reduces to psgf_dp's ``gs * mean_sel + (1 - gs) * g``.
+
+    When NO client is selected (reachable through the public API with external
+    masks) the global model is preserved as-is: every contribution is zero, so
+    dividing by the clamped ``C = 1`` would silently collapse the model toward
+    zero.
     """
-    C = jnp.maximum(jnp.sum(selected), 1).astype(jnp.float32)
+    num_sel = jnp.sum(selected)
+    C = jnp.maximum(num_sel, 1).astype(jnp.float32)
 
     def per_leaf(l, g, m):
         sel = selected.reshape((selected.shape[0],) + (1,) * (l.ndim - 1))
         contrib = m * l + (sel.astype(jnp.float32) - m) * g[None]
-        return jnp.sum(contrib, axis=0) / C
+        return jnp.where(num_sel > 0, jnp.sum(contrib, axis=0) / C, g)
 
     return jax.tree_util.tree_map(per_leaf, client_tree, global_tree, up_gates)
 
@@ -145,6 +170,39 @@ def gate_bytes(gates, client_tree):
         per_gate = _gate_scale(g, l) * jnp.dtype(l.dtype).itemsize
         total = total + jnp.sum(g, dtype=ACCOUNTING_DTYPE) * per_gate
     return total
+
+
+def mix_down_count(client_tree, global_tree, gates, *, use_pallas: bool = False,
+                   interpret: Optional[bool] = None):
+    """Fused downlink: returns ``(mix_down(...), gate_count(...))``.
+
+    On the element-granularity path — ONE ``(K, D)`` leaf with dense ``(K, D)``
+    gates — ``use_pallas=True`` runs the fused ``psgf_mix`` Pallas kernel, which
+    produces the mixed matrix and the comm count in a single pass over the mask
+    (the separate ``gate_count`` reduction re-reads the whole mask otherwise).
+    ``interpret=None`` auto-selects interpret mode off-TPU. Gate sums are 0/1
+    integers, so the fused count is bit-identical to ``gate_count`` while the
+    per-round total stays inside float32's exact-integer range (2^24 ~ 1.6e7
+    gated params/round); beyond that both paths carry ACCOUNTING_DTYPE's
+    relative error, in possibly different rounding orders (see the accounting
+    note at the top of this module). The mix math is the same lerp either way.
+    """
+    cl = jax.tree_util.tree_leaves(client_tree)
+    gl = jax.tree_util.tree_leaves(global_tree)
+    gt = jax.tree_util.tree_leaves(gates)
+    if (use_pallas and len(cl) == 1 and len(gl) == 1 and len(gt) == 1
+            and cl[0].ndim == 2 and gl[0].ndim == 1
+            and gt[0].shape == cl[0].shape and cl[0].dtype == jnp.float32):
+        from repro.kernels.psgf_mix.ops import psgf_mix_batch
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        mixed, count = psgf_mix_batch(gl[0], cl[0], gt[0], interpret=interpret)
+        structure = jax.tree_util.tree_structure(client_tree)
+        return (jax.tree_util.tree_unflatten(structure, [mixed]),
+                count.astype(ACCOUNTING_DTYPE))
+    return (mix_down(client_tree, global_tree, gates),
+            gate_count(gates, client_tree))
 
 
 def sync_round(local, global_, key, policy, select_ratio: float):
@@ -262,8 +320,11 @@ def _round(state, data, key, model_cfg, fl_cfg, meta, policy):
     else:
         w_wire = state["w_global"]
 
-    w_mixed = mix_down(state["w_clients"], w_wire, gates)
-    comm_down = state["comm_down"] + gate_count(gates, state["w_clients"])
+    use_pallas = (fl_cfg.use_pallas_mix
+                  and getattr(policy, "granularity", "element") == "element")
+    w_mixed, n_down = mix_down_count(state["w_clients"], w_wire, gates,
+                                     use_pallas=use_pallas)
+    comm_down = state["comm_down"] + n_down
 
     # ---- LocalUpdate -------------------------------------------------------
     trains = policy.train_mask(selected)
@@ -346,18 +407,164 @@ def _run_chunk(state, key, data, model_cfg, fl_cfg, meta, policy, num_rounds):
     return state, key, ms
 
 
-def evaluate_rmse(model_cfg: forecast.ForecastConfig, w_vec, meta, data) -> float:
-    """RMSE of the global model over all clients' test windows.
+_WHILE_STATICS = ("model_cfg", "fl_cfg", "meta", "policy", "max_rounds",
+                  "eval_every", "patience")
 
-    data: (K, n_win, L+T).
+
+def _improved(loss, best) -> bool:
+    """Host-side convergence test in FLOAT32 arithmetic — the exact compare
+    the while driver runs on-device (`loss < best - 1e-5` on f32 operands).
+    The losses come off the device as exact f32 values; doing the threshold
+    subtraction in f64 here could flip borderline rounds and break the
+    loop/scan/while early-stop parity."""
+    return bool(np.float32(loss) < np.float32(best) - np.float32(1e-5))
+
+
+def _run_while_impl(state, key, train_data, test_data, model_cfg, fl_cfg,
+                    meta, policy, max_rounds, eval_every, patience):
+    """The FULL run — up to ``max_rounds`` rounds, convergence/patience and
+    per-chunk RMSE included — as ONE dispatch.
+
+    A ``lax.while_loop`` over ``eval_every``-round scan chunks carries
+    ``(best_loss, stall, stop)`` on-device, replicating the scan driver's
+    host-side patience logic exactly: per-round ``best_loss``/``stall``
+    updates, frozen once ``stall >= patience`` fires, loop exit at the next
+    chunk boundary. Rounds past ``max_rounds`` inside the final (partial)
+    chunk still execute but their state/key updates are masked out, so the
+    per-round state sequence is identical to the scan driver's for the same
+    seed. Per-round losses and cumulative comm land in preallocated
+    ``(n_chunks * eval_every,)`` buffers and the per-chunk RMSE (computed
+    on-device via :func:`_rmse_device`) in an ``(n_chunks,)`` buffer; the
+    caller reads everything back with a single host sync after the dispatch.
+
+    Returns ``(state, key, loss_buf, comm_buf, rmse_buf, rounds_run,
+    chunks_run)``.
+    """
+    n_chunks = -(-max_rounds // eval_every)
+    loss_buf = jnp.zeros((n_chunks * eval_every,), jnp.float32)
+    comm_buf = jnp.zeros((n_chunks * eval_every,), ACCOUNTING_DTYPE)
+    rmse_buf = jnp.zeros((n_chunks,), jnp.float32)
+
+    def round_body(rcarry, i):
+        state, key, best, stall, stop, r = rcarry
+        active = (r + i) < max_rounds
+        key2, rk = jax.random.split(key)
+        new_state, metrics = _round(state, train_data, rk, model_cfg, fl_cfg,
+                                    meta, policy)
+        state = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(active, n, o), new_state, state)
+        key = jnp.where(active, key2, key)
+        loss = metrics["train_loss"]
+        # the scan driver's host loop verbatim: improve resets stall, a miss
+        # increments it, and once stop fires best/stall freeze for the rest
+        # of the chunk (the host loop `break`s)
+        upd = active & ~stop
+        improved = loss < best - 1e-5
+        nbest = jnp.where(improved, loss, best)
+        nstall = jnp.where(improved, 0, stall + 1)
+        best = jnp.where(upd, nbest, best)
+        stall = jnp.where(upd, nstall, stall)
+        stop = stop | (upd & (nstall >= patience))
+        return ((state, key, best, stall, stop, r),
+                (loss, metrics["comm_total"]))
+
+    def chunk_body(carry):
+        state, key, best, stall, stop, r, c, loss_buf, comm_buf, rmse_buf = carry
+        (state, key, best, stall, stop, _), (losses, comms) = jax.lax.scan(
+            round_body, (state, key, best, stall, stop, r),
+            jnp.arange(eval_every))
+        # r is always a multiple of eval_every and the buffers hold
+        # n_chunks * eval_every entries, so these writes never clamp
+        loss_buf = jax.lax.dynamic_update_slice(loss_buf, losses, (r,))
+        comm_buf = jax.lax.dynamic_update_slice(comm_buf, comms, (r,))
+        rmse = _rmse_device(model_cfg, state["w_global"], meta, test_data,
+                            fl_cfg.client_chunk)
+        rmse_buf = rmse_buf.at[c].set(rmse)
+        return (state, key, best, stall, stop, r + eval_every, c + 1,
+                loss_buf, comm_buf, rmse_buf)
+
+    def chunk_cond(carry):
+        _, _, _, _, stop, r, _, _, _, _ = carry
+        return (r < max_rounds) & ~stop
+
+    carry = (state, key, jnp.array(jnp.inf, jnp.float32),
+             jnp.zeros((), jnp.int32), jnp.zeros((), bool),
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+             loss_buf, comm_buf, rmse_buf)
+    (state, key, _, _, _, r, c, loss_buf, comm_buf, rmse_buf) = \
+        jax.lax.while_loop(chunk_cond, chunk_body, carry)
+    return (state, key, loss_buf, comm_buf, rmse_buf,
+            jnp.minimum(r, max_rounds), c)
+
+
+_run_while_jit = partial(jax.jit, static_argnames=_WHILE_STATICS,
+                         donate_argnames=("state",))(_run_while_impl)
+
+
+def _rmse_device(model_cfg: forecast.ForecastConfig, w_vec, meta, data,
+                 client_chunk: Optional[int] = None):
+    """On-device RMSE of the global model over all clients' test windows.
+
+    data: (K, n_win, L+T). With ``client_chunk`` the forward runs per client
+    through ``lax.map(batch_size=client_chunk)`` so at most ``client_chunk *
+    n_win`` windows' activations are live at once (the single flat forward
+    materializes all ``K * n_win`` — OOM at num_clients=512 full-preset). The
+    reduction always runs over the full (K*n, T) prediction matrix in the same
+    order, so the chunked result matches the flat one (bitwise on the pinned
+    CPU toolchain). Returns a scalar jnp array (jit-safe; the while driver
+    calls this inside its one-dispatch loop).
     """
     params = tree_unflatten_from_vector(w_vec, meta)
     Lb = model_cfg.look_back
     K, n, _ = data.shape
-    x = data[:, :, :Lb].reshape(K * n, Lb)
+    if client_chunk is not None and client_chunk < K:
+        pred = jax.lax.map(
+            lambda cl: forecast.forward(model_cfg, params, cl[:, :Lb]),
+            data, batch_size=client_chunk)
+        pred = pred.reshape(K * n, model_cfg.horizon)
+    else:
+        x = data[:, :, :Lb].reshape(K * n, Lb)
+        pred = forecast.forward(model_cfg, params, x)
     y = data[:, :, Lb:].reshape(K * n, model_cfg.horizon)
-    pred = forecast.forward(model_cfg, params, x)
-    return float(jnp.sqrt(jnp.mean(jnp.square(pred - y))))
+    return jnp.sqrt(jnp.mean(jnp.square(pred - y)))
+
+
+def evaluate_rmse(model_cfg: forecast.ForecastConfig, w_vec, meta, data,
+                  client_chunk: Optional[int] = None) -> float:
+    """RMSE of the global model over all clients' test windows.
+
+    data: (K, n_win, L+T). ``client_chunk`` chunks the forward over clients
+    (see :func:`_rmse_device`); ``None`` keeps the single flat forward.
+    """
+    return float(_rmse_device(model_cfg, w_vec, meta, data, client_chunk))
+
+
+_CLIENT_STATE_KEYS = frozenset({"w_clients", "adam_m", "adam_v", "adam_t"})
+
+
+def client_state_shardings(state, mesh_axis: str = "clients"):
+    """NamedSharding tree for the FL state: client-axis ``(K, ...)`` leaves
+    sharded N-way along axis 0 across the N local devices, server-side
+    scalars/vectors replicated. Returns ``None`` on a single device. Leaves
+    whose client axis does not divide N stay replicated.
+
+    The while driver passes this tree as ``in_shardings`` on its donated
+    carry, so the fully-compiled run keeps the client axis distributed
+    end-to-end instead of gathering it on dispatch.
+    """
+    devices = jax.devices()
+    if len(devices) <= 1:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh = jax.make_mesh((len(devices),), (mesh_axis,))
+    return {
+        k: NamedSharding(mesh, PartitionSpec(mesh_axis)
+                         if k in _CLIENT_STATE_KEYS
+                         and v.shape[0] % len(devices) == 0
+                         else PartitionSpec())
+        for k, v in state.items()
+    }
 
 
 def shard_client_state(state, mesh_axis: str = "clients"):
@@ -366,22 +573,13 @@ def shard_client_state(state, mesh_axis: str = "clients"):
     No-op on a single device. With N devices, the (K, ...) client arrays are
     sharded N-way along axis 0 (server-side scalars/vectors replicated), so
     the vmapped LocalUpdate runs clients in parallel across devices instead
-    of replicating all client state on one.
+    of replicating all client state on one. Sharding decisions come from
+    :func:`client_state_shardings`.
     """
-    devices = jax.devices()
-    if len(devices) <= 1:
+    shardings = client_state_shardings(state, mesh_axis)
+    if shardings is None:
         return state
-    from jax.sharding import NamedSharding, PartitionSpec
-
-    mesh = jax.make_mesh((len(devices),), (mesh_axis,))
-    client_keys = {"w_clients", "adam_m", "adam_v", "adam_t"}
-    sharded = NamedSharding(mesh, PartitionSpec(mesh_axis))
-    replicated = NamedSharding(mesh, PartitionSpec())
-    return {
-        k: jax.device_put(v, sharded if k in client_keys
-                          and v.shape[0] % len(devices) == 0 else replicated)
-        for k, v in state.items()
-    }
+    return {k: jax.device_put(v, shardings[k]) for k, v in state.items()}
 
 
 def run_fl(
@@ -402,14 +600,26 @@ def run_fl(
     """Multi-round FL driver. Returns a history dict with per-round loss,
     cumulative comm, and final RMSE.
 
-    ``driver="scan"`` (default) compiles ``eval_every`` rounds per dispatch
-    and checks convergence only at chunk boundaries — identical round-by-round
-    math to the loop driver (same seed -> same per-round states), but when
-    patience triggers mid-chunk the run stops at the NEXT boundary instead of
-    mid-round, so ``rounds_run`` can exceed the loop driver's by up to
-    ``eval_every - 1``. ``driver="loop"`` is the legacy per-round Python loop
-    (one dispatch + host sync per round), kept for A/B benchmarking
-    (benchmarks/fl_rounds.py).
+    Drivers (identical round-by-round math — same seed -> same per-round
+    states, bitwise on the pinned CPU toolchain; they differ only in how much
+    of the run compiles into one dispatch):
+
+    * ``driver="loop"`` — the legacy per-round Python loop: one dispatch + two
+      host syncs per round, patience can stop mid-chunk. Kept for A/B
+      benchmarking (benchmarks/fl_rounds.py).
+    * ``driver="scan"`` (default) — compiles ``eval_every`` rounds per
+      dispatch (donated carry) and checks convergence host-side at chunk
+      boundaries only; when patience triggers mid-chunk the run stops at the
+      NEXT boundary, so ``rounds_run`` can exceed the loop driver's by up to
+      ``eval_every - 1``.
+    * ``driver="while"`` — fully compiled: a ``lax.while_loop`` over scan
+      chunks carries ``(best_loss, stall, stop)`` ON-DEVICE, so the whole
+      ``max_rounds`` run (per-chunk RMSE eval included) is ONE dispatch with
+      zero per-chunk host round-trips; the host reads the result buffers back
+      once at the end. Stop semantics match the scan driver exactly (same
+      ``rounds_run``). With ``shard_clients=True`` the client-axis shardings
+      are passed as ``in_shardings`` on the donated carry (one fresh jit per
+      call on multi-device hosts; the single-device path uses the cached jit).
 
     ``checkpoint_dir`` persists the final GLOBAL model (params + config) via
     :func:`repro.core.forecaster.save_forecaster`, restorable by
@@ -440,12 +650,13 @@ def run_fl(
             history["train_loss"].append(loss)
             history["comm"].append(comm_total)
             if (r + 1) % eval_every == 0 or r == max_rounds - 1:
-                rmse = evaluate_rmse(model_cfg, state["w_global"], meta, test_data)
+                rmse = evaluate_rmse(model_cfg, state["w_global"], meta,
+                                     test_data, fl_cfg.client_chunk)
                 history["rmse"].append((r, rmse))
                 if verbose:
                     print(f"round {r:4d}  loss {loss:.4f}  rmse {rmse:.4f}  "
                           f"comm {comm_total:.3e}")
-            if loss < best_loss - 1e-5:
+            if _improved(loss, best_loss):
                 best_loss = loss
                 stall = 0
             else:
@@ -467,7 +678,7 @@ def run_fl(
             r += n
             # host-side convergence/patience, chunk boundary only
             for loss in losses.tolist():
-                if loss < best_loss - 1e-5:
+                if _improved(loss, best_loss):
                     best_loss = loss
                     stall = 0
                 else:
@@ -475,15 +686,60 @@ def run_fl(
                     if stall >= patience:
                         stop = True
                         break
-            rmse = evaluate_rmse(model_cfg, state["w_global"], meta, test_data)
+            rmse = evaluate_rmse(model_cfg, state["w_global"], meta, test_data,
+                                 fl_cfg.client_chunk)
             history["rmse"].append((r - 1, rmse))
             if verbose:
                 print(f"round {r - 1:4d}  loss {losses[-1]:.4f}  "
                       f"rmse {rmse:.4f}  comm {comm_total:.3e}")
+    elif driver == "while":
+        shardings = client_state_shardings(state) if shard_clients else None
+        if shardings is None:
+            fn = _run_while_jit
+        else:
+            # fresh jit so the donated carry's client-axis layout is pinned
+            # via in_shardings (train_data rides along client-sharded too)
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            mesh = next(iter(shardings.values())).mesh
+            ndev = mesh.devices.size
+            data_spec = (PartitionSpec("clients")
+                         if train_data.shape[0] % ndev == 0
+                         else PartitionSpec())
+            data_sh = NamedSharding(mesh, data_spec)
+            train_data = jax.device_put(train_data, data_sh)
+            fn = jax.jit(_run_while_impl, static_argnames=_WHILE_STATICS,
+                         donate_argnames=("state",),
+                         in_shardings=(shardings, None, data_sh, None))
+        # statics ride positionally: pjit rejects kwargs with in_shardings
+        out = fn(state, key, train_data, test_data, model_cfg, fl_cfg, meta,
+                 policy, max_rounds, eval_every, patience)
+        state, key, loss_buf, comm_buf, rmse_buf, rounds_dev, chunks_dev = out
+        rounds_run = int(rounds_dev)      # the ONE host sync of the whole run
+        chunks_run = int(chunks_dev)
+        losses = np.asarray(loss_buf)[:rounds_run]
+        comms = np.asarray(comm_buf)[:rounds_run]
+        history["round"] = list(range(rounds_run))
+        history["train_loss"] = losses.tolist()
+        history["comm"] = comms.tolist()
+        comm_total = float(comms[-1]) if rounds_run else 0.0
+        for i, rmse in enumerate(np.asarray(rmse_buf)[:chunks_run].tolist()):
+            r_end = min((i + 1) * eval_every, max_rounds) - 1
+            history["rmse"].append((r_end, rmse))
+            if verbose:
+                print(f"round {r_end:4d}  loss {losses[min(r_end, rounds_run - 1)]:.4f}  "
+                      f"rmse {rmse:.4f}  comm {comm_total:.3e}")
     else:
         raise ValueError(f"unknown driver: {driver!r}")
 
-    final_rmse = evaluate_rmse(model_cfg, state["w_global"], meta, test_data)
+    # scan/while always evaluate the final state at the last chunk boundary;
+    # reuse that entry instead of a second full test-set forward (the loop
+    # driver can break mid-chunk, where the last entry is stale -> recompute)
+    if history["rmse"] and history["rmse"][-1][0] == len(history["round"]) - 1:
+        final_rmse = history["rmse"][-1][1]
+    else:
+        final_rmse = evaluate_rmse(model_cfg, state["w_global"], meta,
+                                   test_data, fl_cfg.client_chunk)
     history["final_rmse"] = final_rmse
     history["final_comm"] = comm_total
     history["rounds_run"] = len(history["round"])

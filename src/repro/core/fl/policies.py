@@ -44,7 +44,14 @@ class Policy(Protocol):
     ``selected``: boolean ``(K,)`` from the engine's client selection.
     ``keys``: for ``downlink_gates`` a ``(share_key, forward_key)`` pair; for
     ``uplink_gates`` a single key.
+
+    ``granularity`` declares the gate layout: ``"element"`` policies emit
+    dense ``(K, D)`` gates over the flat client matrix (eligible for the
+    fused psgf_mix Pallas downlink in the engine), ``"leaf"`` policies emit
+    per-leaf scalar gates.
     """
+
+    granularity: str
 
     def downlink_gates(self, keys, global_tree, client_tree, selected): ...
 
@@ -64,6 +71,8 @@ class OnlineFed:
     global model, they train, the server averages them back. Unselected
     clients idle."""
 
+    granularity = "element"
+
     def downlink_gates(self, keys, global_tree, client_tree, selected):
         K, D = client_tree.shape
         return jnp.broadcast_to(selected[:, None], (K, D)).astype(jnp.float32)
@@ -82,6 +91,7 @@ class PSOFed:
     parameter subset S_n^i and everyone trains locally; the server aggregates
     the selected clients' shared subsets."""
 
+    granularity = "element"
     share_ratio: float = 0.3
 
     def downlink_gates(self, keys, global_tree, client_tree, selected):
@@ -124,6 +134,7 @@ class PSGFTopK:
     (not thresholding) so ties — e.g. the all-zero diff at round 1 — still
     select exactly k entries."""
 
+    granularity = "element"
     share_ratio: float = 0.3
     forward_ratio: float = 0.2
 
@@ -162,6 +173,7 @@ class LeafPSGF:
     back within one sync (psgf_dp semantics).
     """
 
+    granularity = "leaf"
     share_ratio: float = 0.3
     forward_ratio: float = 0.2
 

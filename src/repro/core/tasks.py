@@ -149,7 +149,16 @@ def task_forecaster(task: ForecastTask, model: str = "logtst",
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """Everything ``run_experiment`` needs; grid entries are
-    ``(policy_name, fl_overrides)`` pairs layered over the shared knobs."""
+    ``(policy_name, fl_overrides)`` pairs layered over the shared knobs
+    (overrides reach every ``FLConfig`` field, e.g. ``client_chunk`` or
+    ``use_pallas_mix``).
+
+    ``driver`` selects the ``run_fl`` round driver: ``"scan"`` (default,
+    ``eval_every`` rounds per dispatch), ``"while"`` (fully compiled —
+    on-device early-stop, one dispatch per run) or ``"loop"`` (legacy
+    per-round baseline). ``shard_clients`` lays the client axis out across
+    local devices (``engine.shard_client_state``); the while driver threads
+    the shardings through ``in_shardings`` on its donated carry."""
 
     task: ForecastTask
     model: Forecaster
@@ -162,6 +171,7 @@ class ExperimentSpec:
     eval_every: int = 10
     seed: int = 0                 # run key: PRNGKey(seed + cluster)
     driver: str = "scan"
+    shard_clients: bool = False
 
     def fl_config(self, policy: str, num_clients: int, overrides: dict) -> FLConfig:
         kw = dict(policy=policy, num_clients=num_clients,
@@ -222,7 +232,8 @@ def run_experiment(spec: ExperimentSpec, checkpoint_dir: Optional[str] = None,
             hist = run_fl(model.cfg, fl_cfg, jnp.asarray(tr), jnp.asarray(te),
                           key, max_rounds=spec.max_rounds,
                           patience=spec.patience, eval_every=spec.eval_every,
-                          driver=spec.driver, verbose=verbose,
+                          driver=spec.driver, shard_clients=spec.shard_clients,
+                          verbose=verbose,
                           checkpoint_dir=None if checkpoint_dir is None else
                           f"{checkpoint_dir}/{label}" +
                           ("" if c is None else f"_c{c}"))

@@ -54,3 +54,40 @@ def psgf_mix_kernel(w_global, w_local, mask, *, block_rows=256, interpret=False)
         ],
         interpret=interpret,
     )(w_global, w_local, mask)
+
+
+def _batch_kernel(wg_ref, wl_ref, m_ref, out_ref, cnt_ref):
+    m = m_ref[...]  # (1, block_rows, LANES)
+    out_ref[...] = (m * wg_ref[...] + (1.0 - m) * wl_ref[...]).astype(out_ref.dtype)
+    cnt_ref[0, 0] = jnp.sum(m.astype(jnp.float32))
+
+
+def psgf_mix_batch_kernel(w_global, w_clients, mask, *, block_rows=256,
+                          interpret=False):
+    """Client-batched mix for the FL engine's downlink: ``w_global`` is
+    (rows, 128), ``w_clients``/``mask`` are (K, rows, 128). Grid
+    ``(K, rows // block_rows)`` — the global block is re-read per client from
+    HBM but never materialized as a (K, rows, 128) broadcast. Returns
+    ``(mixed (K, rows, 128), counts (K, rows // block_rows))``."""
+    K, rows = w_clients.shape[0], w_clients.shape[1]
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0
+    grid = (K, rows // block_rows)
+    return pl.pallas_call(
+        _batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda k, i: (i, 0)),
+            pl.BlockSpec((1, block_rows, LANES), lambda k, i: (k, i, 0)),
+            pl.BlockSpec((1, block_rows, LANES), lambda k, i: (k, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_rows, LANES), lambda k, i: (k, i, 0)),
+            pl.BlockSpec((1, 1), lambda k, i: (k, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, rows, LANES), w_clients.dtype),
+            jax.ShapeDtypeStruct((K, grid[1]), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_global, w_clients, mask)

@@ -9,3 +9,10 @@ def psgf_mix_ref(w_global, w_local, mask):
     m = mask.astype(w_global.dtype)
     mixed = m * w_global + (1.0 - m) * w_local
     return mixed, jnp.sum(m.astype(jnp.float32))
+
+
+def psgf_mix_batch_ref(w_global, w_clients, mask):
+    """w_global (D,); w_clients/mask (K, D). Returns (mixed (K, D), count)."""
+    m = mask.astype(w_clients.dtype)
+    mixed = m * w_global[None, :] + (1.0 - m) * w_clients
+    return mixed, jnp.sum(m.astype(jnp.float32))

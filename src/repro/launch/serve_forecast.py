@@ -13,8 +13,10 @@ this module turns that checkpoint into a batched inference endpoint:
     matter what batch sizes arrive;
   * :meth:`ForecastServer.submit` feeds a MICRO-BATCHING queue: a worker
     thread coalesces single-station requests for up to ``max_wait_ms`` (or
-    until ``max_batch``) and resolves each request's ``Future`` with its own
-    forecast row.
+    until ``max_batch``), groups the coalesced batch by (M, L) shape (one
+    bucketed run per group, so mixed channel counts coexist in one window)
+    and resolves each request's ``Future`` with its own forecast row;
+    malformed requests fail only their own future.
 
 CLI (restore + synthetic load, reports forecasts/sec):
 
@@ -130,10 +132,24 @@ class ForecastServer:
         self._worker_thread.start()
 
     def submit(self, x) -> Future:
-        """Enqueue ONE request (M, L); resolves to its (M, T) forecast."""
+        """Enqueue ONE request (M, L); resolves to its (M, T) forecast.
+
+        A malformed request (wrong rank or look-back length) fails ONLY its
+        own future — it never reaches the queue, so the micro-batch it would
+        have been coalesced into is unaffected.
+        """
         fut: Future = Future()
+        L = self.forecaster.cfg.look_back
+        try:
+            x = np.asarray(x, np.float32)
+            if x.ndim != 2 or x.shape[1] != L:
+                raise ValueError(
+                    f"request must be (M, look_back={L}), got {x.shape}")
+        except Exception as exc:  # incl. ragged/non-numeric asarray failures
+            fut.set_exception(exc)
+            return fut
         self.stats["requests"] += 1
-        self._queue.put((np.asarray(x, np.float32), fut))
+        self._queue.put((x, fut))
         return fut
 
     def stop(self):
@@ -163,13 +179,20 @@ class ForecastServer:
                     stopping = True
                     break
                 batch.append(nxt)
-            try:
-                ys = self.predict(np.stack([x for x, _ in batch]))
-                for (_, fut), y in zip(batch, ys):
-                    fut.set_result(y)
-            except Exception as exc:  # propagate to every waiter
-                for _, fut in batch:
-                    fut.set_exception(exc)
+            # coalesced requests may have heterogeneous (M, L) shapes (e.g.
+            # different channel counts); np.stack over the raw batch would
+            # raise and fail EVERY waiter, so run one bucket per shape group
+            groups: dict = {}
+            for x, fut in batch:
+                groups.setdefault(x.shape, []).append((x, fut))
+            for items in groups.values():
+                try:
+                    ys = self.predict(np.stack([x for x, _ in items]))
+                    for (_, fut), y in zip(items, ys):
+                        fut.set_result(y)
+                except Exception as exc:  # propagate to this group's waiters
+                    for _, fut in items:
+                        fut.set_exception(exc)
             if stopping:
                 return
 

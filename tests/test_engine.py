@@ -204,6 +204,224 @@ def test_scan_driver_patience_stops_at_chunk_boundary():
     assert hist["rounds_run"] % 5 == 0
 
 
+# ---- while driver (fully-compiled run, on-device early stop) ---------------
+
+
+@pytest.mark.parametrize("eval_every", [4, 5])
+def test_while_driver_bit_identical_to_scan(eval_every):
+    """ONE dispatch (lax.while_loop over chunks) must reproduce the scan
+    driver bit-for-bit — per-round losses, cumulative comm, final state and
+    the per-chunk RMSE schedule. eval_every=5 exercises the masked partial
+    final chunk (12 % 5 != 0)."""
+    model_cfg, fl_cfg, tr, te = _tiny_setup("psgf")
+    R = 12
+    hists = {}
+    for driver in ("scan", "while"):
+        hists[driver] = E.run_fl(model_cfg, fl_cfg, tr, te,
+                                 jax.random.PRNGKey(0), max_rounds=R,
+                                 patience=R + 1, eval_every=eval_every,
+                                 driver=driver)
+    hs, hw = hists["scan"], hists["while"]
+    assert hs["rounds_run"] == hw["rounds_run"] == R
+    np.testing.assert_array_equal(np.asarray(hs["train_loss"]),
+                                  np.asarray(hw["train_loss"]))
+    np.testing.assert_array_equal(np.asarray(hs["comm"]), np.asarray(hw["comm"]))
+    for k in hs["state"]:
+        np.testing.assert_array_equal(np.asarray(hs["state"][k]),
+                                      np.asarray(hw["state"][k]),
+                                      err_msg=f"state[{k}]")
+    # same chunk-boundary eval schedule; RMSE values agree (the while driver
+    # computes them in-graph, the scan driver eagerly — allclose, not bitwise)
+    assert [r for r, _ in hs["rmse"]] == [r for r, _ in hw["rmse"]]
+    np.testing.assert_allclose([v for _, v in hs["rmse"]],
+                               [v for _, v in hw["rmse"]], rtol=1e-6)
+    np.testing.assert_allclose(hs["final_rmse"], hw["final_rmse"], rtol=1e-6)
+
+
+def test_while_driver_early_stop_parity():
+    """Patience fires on-device and the while driver stops at the same chunk
+    boundary as the scan driver's host-side check."""
+    model_cfg, fl_cfg, tr, te = _tiny_setup("psgf")
+    kw = dict(max_rounds=40, patience=1, eval_every=5)
+    hs = E.run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                  driver="scan", **kw)
+    hw = E.run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                  driver="while", **kw)
+    assert hw["rounds_run"] == hs["rounds_run"] < 40
+    assert hw["rounds_run"] % 5 == 0
+    assert len(hw["train_loss"]) == hw["rounds_run"]
+    assert len(hw["rmse"]) == hw["rounds_run"] // 5
+
+
+_WHILE_SHARDED_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import forecast as F
+from repro.core.fl import engine as E
+from repro.data.synthetic import nn5_synthetic
+from repro.data.windowing import client_datasets
+
+model_cfg = F.logtst_config(look_back=32, horizon=2, d_model=16, num_heads=2,
+                            d_ff=32, patch_len=8, stride=4)
+fl_cfg = E.FLConfig(policy="psgf", num_clients=6, local_steps=2, batch_size=8)
+series = nn5_synthetic(seed=0, num_clients=6, num_days=200)
+tr, va, te, _ = client_datasets(series, 32, 2)
+tr, te = jnp.asarray(tr), jnp.asarray(te)
+
+state, meta = E.init_fl_state(model_cfg, fl_cfg, jax.random.PRNGKey(0))
+sh = E.client_state_shardings(state)
+kw = dict(max_rounds=8, patience=9, eval_every=4, driver="while")
+h_ref = E.run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0), **kw)
+h_sh = E.run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                shard_clients=True, **kw)
+print(json.dumps({
+    "num_devices": len(jax.devices()),
+    "w_clients_spec": str(sh["w_clients"].spec),
+    "w_global_spec": str(sh["w_global"].spec),
+    "state_sharded": len(h_sh["state"]["w_clients"].sharding.device_set) == 2,
+    "rmse_match": bool(np.isclose(h_ref["final_rmse"], h_sh["final_rmse"],
+                                  rtol=1e-5)),
+    "rounds": h_sh["rounds_run"],
+}))
+"""
+
+
+def test_while_driver_client_sharded_carry():
+    """End-to-end client-axis sharding through the while driver: with 2
+    virtual devices, client_state_shardings shards the (K, ...) leaves,
+    run_fl(driver="while", shard_clients=True) pins them via in_shardings on
+    the donated carry, and the final state comes back client-sharded with the
+    same result as the unsharded run."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    r = subprocess.run([sys.executable, "-c", _WHILE_SHARDED_CHILD], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["num_devices"] == 2
+    assert "clients" in out["w_clients_spec"]
+    assert "clients" not in out["w_global_spec"]
+    assert out["state_sharded"], "final carry lost the client-axis sharding"
+    assert out["rmse_match"], "sharded while run diverged from unsharded"
+    assert out["rounds"] == 8
+
+
+# ---- fused pallas downlink mix (use_pallas_mix) -----------------------------
+
+
+def test_use_pallas_mix_round_bit_identical():
+    """The fused psgf_mix Pallas downlink (interpret mode on CPU) must leave
+    every state leaf and metric bit-identical to the unfused mix_down +
+    gate_count path."""
+    model_cfg, fl_cfg, tr, te = _tiny_setup("psgf")
+    pallas_cfg = E.FLConfig(**{**fl_cfg.__dict__, "use_pallas_mix": True})
+    state, meta = E.init_fl_state(model_cfg, fl_cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+    s_a, m_a = E.fl_round(state, tr, key, model_cfg, fl_cfg, meta)
+    s_b, m_b = E.fl_round(state, tr, key, model_cfg, pallas_cfg, meta)
+    for k in s_a:
+        np.testing.assert_array_equal(np.asarray(s_a[k]), np.asarray(s_b[k]),
+                                      err_msg=f"state[{k}]")
+    for k in m_a:
+        np.testing.assert_array_equal(np.asarray(m_a[k]), np.asarray(m_b[k]),
+                                      err_msg=f"metrics[{k}]")
+
+
+def test_mix_down_count_fused_matches_unfused():
+    """Engine-level fused helper == (mix_down, gate_count) on the element
+    (K, D) path, and the leaf-granularity pytree path is untouched by the
+    flag."""
+    key = jax.random.PRNGKey(0)
+    K, D = 5, 700
+    ks = jax.random.split(key, 3)
+    clients = jax.random.normal(ks[0], (K, D))
+    glob = jax.random.normal(ks[1], (D,))
+    gates = (jax.random.uniform(ks[2], (K, D)) < 0.3).astype(jnp.float32)
+    mixed_ref = E.mix_down(clients, glob, gates)
+    count_ref = E.gate_count(gates, clients)
+    mixed, count = E.mix_down_count(clients, glob, gates, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(mixed_ref), np.asarray(mixed))
+    assert float(count) == float(count_ref)
+    # pytree (leaf-granularity) input: flag is a no-op, same unfused values
+    tree_c = {"a": clients, "b": clients[:, :64]}
+    tree_g = {"a": glob, "b": glob[:64]}
+    tree_m = {"a": gates, "b": gates[:, :64]}
+    mt, ct = E.mix_down_count(tree_c, tree_g, tree_m, use_pallas=True)
+    for k in tree_c:
+        np.testing.assert_array_equal(
+            np.asarray(E.mix_down(tree_c, tree_g, tree_m)[k]),
+            np.asarray(mt[k]))
+    assert float(ct) == float(E.gate_count(tree_m, tree_c))
+
+
+# ---- aggregate: all-unselected regression -----------------------------------
+
+
+def test_aggregate_preserves_global_when_none_selected():
+    """selected all-False (reachable through the public aggregate/sync_round
+    API with external masks) must preserve the global model — the clamped
+    C=1 divisor used to average zero contributions into a zero model."""
+    key = jax.random.PRNGKey(1)
+    K, D = 4, 32
+    clients = jax.random.normal(key, (K, D))
+    glob = jax.random.normal(jax.random.fold_in(key, 1), (D,))
+    none = jnp.zeros((K,), bool)
+    gates = jnp.zeros((K, D), jnp.float32)  # no uplink when nobody selected
+    out = E.aggregate(clients, glob, gates, none)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(glob))
+    # leaf-granularity pytrees preserved too
+    tree_c = {"a": clients, "b": clients[:, :8]}
+    tree_g = {"a": glob, "b": glob[:8]}
+    tree_m = {"a": gates, "b": gates[:, :8]}
+    out_t = E.aggregate(tree_c, tree_g, tree_m, none)
+    for k in tree_g:
+        np.testing.assert_array_equal(np.asarray(out_t[k]),
+                                      np.asarray(tree_g[k]))
+    # and a normal selection still averages (unchanged behavior)
+    some = jnp.array([True, False, True, False])
+    ones = jnp.ones((K, D), jnp.float32)
+    out2 = E.aggregate(clients, glob, jnp.where(some[:, None], ones, 0.), some)
+    np.testing.assert_allclose(np.asarray(out2),
+                               np.asarray((clients[0] + clients[2]) / 2),
+                               rtol=1e-6)
+
+
+# ---- chunked evaluate_rmse --------------------------------------------------
+
+
+def test_evaluate_rmse_chunked_bit_identical():
+    """client_chunk'd eval (lax.map over clients) must return the same RMSE
+    as the flat single-forward eval — bitwise on the pinned CPU toolchain —
+    while keeping at most client_chunk clients' activations live."""
+    model_cfg, fl_cfg, tr, te = _tiny_setup("psgf")
+    state, meta = E.init_fl_state(model_cfg, fl_cfg, jax.random.PRNGKey(0))
+    full = E.evaluate_rmse(model_cfg, state["w_global"], meta, te)
+    for chunk in (1, 2, 4):
+        chunked = E.evaluate_rmse(model_cfg, state["w_global"], meta, te,
+                                  client_chunk=chunk)
+        assert chunked == full, (chunk, chunked, full)
+    # chunk >= K falls back to the flat forward (identical by construction)
+    assert E.evaluate_rmse(model_cfg, state["w_global"], meta, te,
+                           client_chunk=64) == full
+
+
+def test_run_fl_passes_client_chunk_to_eval():
+    """run_fl's eval path uses FLConfig.client_chunk; history must match the
+    unchunked run on the quick preset (same per-round states, same evals)."""
+    model_cfg, fl_cfg, tr, te = _tiny_setup("psgf")
+    chunked_cfg = E.FLConfig(**{**fl_cfg.__dict__, "client_chunk": 2})
+    kw = dict(max_rounds=4, patience=5, eval_every=2, driver="scan")
+    h_a = E.run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0), **kw)
+    h_b = E.run_fl(model_cfg, chunked_cfg, tr, te, jax.random.PRNGKey(0), **kw)
+    np.testing.assert_allclose(np.asarray(h_a["train_loss"]),
+                               np.asarray(h_b["train_loss"]), rtol=1e-5)
+    np.testing.assert_allclose(h_a["final_rmse"], h_b["final_rmse"], rtol=1e-5)
+
+
 # ---- client chunking / scale ----------------------------------------------
 
 

@@ -266,6 +266,60 @@ def test_server_single_request_and_queue(rng_key):
     assert rep["forecasts_per_sec"] > 0 and rep["requests"] == 9
 
 
+def test_queue_heterogeneous_shapes_one_microbatch(rng_key):
+    """Coalesced requests with different channel counts (M) used to crash the
+    whole micro-batch — np.stack over the ragged batch raised and failed
+    EVERY waiter's Future. The worker now groups by shape and runs one bucket
+    per group, so mixed-M requests in one coalescing window all resolve."""
+    fc = _tiny()
+    params = fc.init_params(rng_key)
+    # long wait so all submissions land in ONE coalescing window
+    server = ForecastServer(fc, params, max_batch=8, max_wait_ms=200.0)
+    server.warmup(channels=2)
+    server.warmup(channels=3)
+    server.start()
+    try:
+        rng = np.random.default_rng(0)
+        xs = [rng.standard_normal((m, fc.cfg.look_back)).astype(np.float32)
+              for m in (2, 3, 2, 3, 2)]
+        futs = [server.submit(x) for x in xs]
+        ys = [f.result(timeout=60) for f in futs]
+    finally:
+        server.stop()
+    for x, y in zip(xs, ys):
+        assert y.shape == (x.shape[0], fc.cfg.horizon)
+        ref = np.asarray(fc.forward_multivariate(params, jnp.asarray(x[None])))[0]
+        np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_submit_rejects_only_the_malformed_request(rng_key):
+    """A bad request (wrong look-back / rank) fails ITS OWN future without
+    poisoning the batch it would have been coalesced into."""
+    fc = _tiny()
+    params = fc.init_params(rng_key)
+    server = ForecastServer(fc, params, max_batch=8, max_wait_ms=200.0)
+    server.warmup(channels=2)
+    server.start()
+    try:
+        good = np.ones((2, fc.cfg.look_back), np.float32)
+        bad_len = np.ones((2, fc.cfg.look_back + 3), np.float32)
+        bad_rank = np.ones((fc.cfg.look_back,), np.float32)
+        f1 = server.submit(good)
+        f2 = server.submit(bad_len)
+        f3 = server.submit(bad_rank)
+        f4 = server.submit(good)
+        f5 = server.submit([[1.0, 2.0], [1.0]])  # ragged: asarray itself fails
+        assert f1.result(timeout=60).shape == (2, fc.cfg.horizon)
+        assert f4.result(timeout=60).shape == (2, fc.cfg.horizon)
+        for bad_fut in (f2, f3):
+            with pytest.raises(ValueError, match="look_back"):
+                bad_fut.result(timeout=60)
+        with pytest.raises(Exception):
+            f5.result(timeout=60)
+    finally:
+        server.stop()
+
+
 def test_checkpoint_restore_serve_roundtrip(rng_key, tmp_path):
     """FL -> checkpoint -> restore -> served forecasts match the training-side
     model (same batch shape; jit-vs-eager ulp tolerance)."""

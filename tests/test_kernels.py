@@ -9,8 +9,8 @@ from hypothesis_compat import given, settings, st  # optional-dep guard
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.psgf_mix.ops import psgf_mix
-from repro.kernels.psgf_mix.ref import psgf_mix_ref
+from repro.kernels.psgf_mix.ops import _pick_block_rows, psgf_mix, psgf_mix_batch
+from repro.kernels.psgf_mix.ref import psgf_mix_batch_ref, psgf_mix_ref
 from repro.kernels.ssm_scan.ops import ssm_scan
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 
@@ -100,6 +100,53 @@ def test_psgf_mix_properties(seed, ratio):
     np.testing.assert_allclose(out[mn], np.asarray(wg)[mn], atol=1e-7)
     np.testing.assert_allclose(out[~mn], np.asarray(wl)[~mn], atol=1e-7)
     assert float(cnt) == mn.sum()
+
+
+@pytest.mark.parametrize("K,D", [(1, 64), (4, 1000), (6, 4096), (3, 539_000)])
+def test_psgf_mix_batch_vs_ref(K, D, rng_key):
+    """Client-batched fused mix (the FL engine's downlink): bitwise mix, exact
+    count summed over all clients."""
+    ks = jax.random.split(rng_key, 3)
+    wg = jax.random.normal(ks[0], (D,))
+    wc = jax.random.normal(ks[1], (K, D))
+    m = jax.random.uniform(ks[2], (K, D)) < 0.3
+    out, cnt = psgf_mix_batch(wg, wc, m, interpret=True)
+    ref, rcnt = psgf_mix_batch_ref(wg, wc, m)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert float(cnt) == float(rcnt) == np.asarray(m).sum()
+
+
+def test_psgf_mix_batch_block_size_invariance(rng_key):
+    ks = jax.random.split(rng_key, 3)
+    wg = jax.random.normal(ks[0], (3000,))
+    wc = jax.random.normal(ks[1], (3, 3000))
+    m = jax.random.uniform(ks[2], (3, 3000)) < 0.5
+    o1, c1 = psgf_mix_batch(wg, wc, m, block_rows=8, interpret=True)
+    o2, c2 = psgf_mix_batch(wg, wc, m, block_rows=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert float(c1) == float(c2)
+
+
+def test_pick_block_rows_alignment():
+    """The block-rows fallback must stay (8, 128)-aligned: the old linear
+    ``while rows % br: br -= 1`` scan could settle on a NON-multiple-of-8
+    divisor (e.g. rows=296 -> br=148) or degrade toward scalar-row blocks
+    with small caps. The picker returns the largest divisor of ``rows`` that
+    is a multiple of 8 and <= block_rows (clamped up to 8)."""
+    # rows = 8 * 37 (prime): old code picked 148 (296 % 148 == 0, 148 % 8 != 0)
+    assert _pick_block_rows(296, 256) == 8
+    # exact divisor available: use the cap itself
+    assert _pick_block_rows(2048, 256) == 256
+    # rows smaller than the cap: whole array in one block
+    assert _pick_block_rows(64, 256) == 64
+    # caps below 8 clamp up to the minimum aligned tile, never 1-row blocks
+    assert _pick_block_rows(296, 1) == 8
+    assert _pick_block_rows(2048, 7) == 8
+    # largest aligned divisor under the cap, not just any divisor
+    assert _pick_block_rows(8 * 12, 8 * 5) == 8 * 4
+    for rows, cap in [(296, 256), (2048, 100), (4096, 256), (8 * 30, 64)]:
+        br = _pick_block_rows(rows, cap)
+        assert rows % br == 0 and br % 8 == 0 and br <= max(cap, 8)
 
 
 # ---------------- ssm_scan ----------------
