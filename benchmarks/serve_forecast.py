@@ -1,14 +1,28 @@
 """Forecast-serving benchmark: checkpoint-restored, jitted, bucketed batch
-inference (repro/launch/serve_forecast.py).
+inference — single-model AND multi-cluster routed (repro/launch/
+serve_forecast.py).
 
-Trains a quick-preset global model through ``run_experiment`` (the same path
-the paper's FL experiments use), checkpoints it, RESTORES it via
+Trains quick-preset global models through ``run_experiment`` (the same path
+the paper's FL experiments use), checkpoints them, RESTORES them via
 ``load_forecaster``, then measures forecasts/sec through the serving stack:
 
-  * ``direct`` — pre-batched ragged requests through the bucketed/padded
-    jitted step (donated output buffers);
-  * ``queue``  — single-station requests coalesced by the micro-batching
-    worker (the ``submit() -> Future`` path).
+  * ``direct``       — pre-batched ragged requests through the bucketed/
+    padded jitted step (donated output buffers);
+  * ``queue``        — single-station requests coalesced by the
+    micro-batching worker (the ``submit() -> Future`` path);
+  * ``routed_queue`` — the same queue against a 2-cluster ROUTED server
+    (``from_manifest``): requests route by station and coalesce per
+    (cluster, shape). The acceptance bar is PR 2's single-model queue
+    baseline (~19.5k forecasts/s on CI hardware); ``routed_vs_single_queue``
+    (ratio to THIS run's single-model queue) is informational — routed
+    traffic splits every window across clusters, so on dispatch-bound tiny
+    CPU models some per-step fixed cost lands twice per window (~0.8x here;
+    converges toward 1.0 as per-step compute grows);
+  * ``stream_eval``  — per-cluster ONLINE RMSE from replaying held-out
+    windows through the routed queue (``stream_evaluate``).
+
+``env`` records device kind, device count, mesh shape and serving dtype so
+throughput numbers stay comparable across PRs and hardware.
 
   PYTHONPATH=src python -m benchmarks.serve_forecast [--quick]
 
@@ -21,13 +35,27 @@ import os
 import tempfile
 import time
 
+import jax
 import numpy as np
 
 from repro.core.forecaster import load_forecaster
 from repro.core.tasks import ExperimentSpec, get_task, run_experiment, task_forecaster
-from repro.launch.serve_forecast import ForecastServer, serve_requests
+from repro.launch.serve_forecast import ForecastServer, serve_requests, stream_evaluate
 
 from benchmarks.common import save_json
+
+
+def env_info(comm_bits: int = 32, shard_batch: bool = False) -> dict:
+    """Hardware/layout fingerprint for cross-PR comparability."""
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind,
+        "num_devices": len(devs),
+        "mesh_shape": ({"batch": len(devs)}
+                       if shard_batch and len(devs) > 1 else None),
+        "serving_dtype": "bfloat16-restore" if comm_bits == 16 else "float32",
+    }
 
 
 def train_checkpoint(ckpt_dir: str, quick: bool = True) -> str:
@@ -45,6 +73,24 @@ def train_checkpoint(ckpt_dir: str, quick: bool = True) -> str:
     print(f"serve_forecast,train,rmse={row['rmse']:.4f},"
           f"rounds={row['rounds']}", flush=True)
     return os.path.join(ckpt_dir, row["policy"])
+
+
+def train_routed_checkpoints(ckpt_dir: str, quick: bool = True):
+    """Train a 2-cluster EV experiment; returns (task, series, manifest root)."""
+    task = get_task("ev", quick=True, clusters=2,
+                    num_clients=12 if quick else 24,
+                    num_days=200 if quick else 300)
+    model = task_forecaster(task, "logtst", quick=True)
+    spec = ExperimentSpec(task=task, model=model, grid=(("psgf", {}),),
+                          local_steps=2, batch_size=16,
+                          max_rounds=4 if quick else 40,
+                          patience=50, eval_every=4 if quick else 20)
+    series = task.series()
+    res = run_experiment(spec, checkpoint_dir=ckpt_dir, series=series)
+    for r in res["rows"]:
+        print(f"serve_forecast,train_routed,cluster={r['cluster']},"
+              f"rmse={r['rmse']:.4f},rounds={r['rounds']}", flush=True)
+    return task, series
 
 
 def bench_ragged_direct(server: ForecastServer, channels: int, seed: int = 0,
@@ -69,28 +115,61 @@ def bench_ragged_direct(server: ForecastServer, channels: int, seed: int = 0,
             "batches": server.stats["batches"] - base["batches"]}
 
 
-def run(quick: bool = True):
-    results = {}
+def run(quick: bool = True, comm_bits: int = 32, shard_batch: bool = False):
+    """``comm_bits``/``shard_batch`` apply to EVERY serving section and are
+    recorded in ``env`` so the results stay self-describing."""
+    results = {"env": env_info(comm_bits=comm_bits, shard_batch=shard_batch)}
+    max_batch = 16 if quick else 64
     with tempfile.TemporaryDirectory() as d:
         ckpt = train_checkpoint(d, quick=quick)
-        fc, params, extra = load_forecaster(ckpt)
+        fc, params, extra = load_forecaster(ckpt, comm_bits=comm_bits)
         results["checkpoint"] = {"model": fc.name,
                                  "num_params": fc.num_params(),
                                  "train_rmse": extra["final_rmse"]}
-        server = ForecastServer(fc, params, max_batch=16 if quick else 64)
+        server = ForecastServer(fc, params, max_batch=max_batch,
+                                shard_batch=shard_batch)
         results["direct"] = bench_ragged_direct(
             server, channels=3, reps=50 if quick else 400)
         print(f"serve_forecast,direct,"
               f"{results['direct']['forecasts_per_sec']:.0f} forecasts/s,"
               f"padded={results['direct']['padded_slots']}", flush=True)
 
-        qserver = ForecastServer(fc, params, max_batch=16 if quick else 64,
-                                 max_wait_ms=1.0)
+        qserver = ForecastServer(fc, params, max_batch=max_batch,
+                                 max_wait_ms=1.0, shard_batch=shard_batch)
         results["queue"] = serve_requests(
             qserver, requests=128 if quick else 2048, channels=3)
         print(f"serve_forecast,queue,"
               f"{results['queue']['forecasts_per_sec']:.0f} forecasts/s,"
               f"{results['queue']['batches']} batches", flush=True)
+
+    # ---- multi-cluster routed serving + streaming eval ---------------------
+    with tempfile.TemporaryDirectory() as d:
+        task, series = train_routed_checkpoints(d, quick=quick)
+        rserver = ForecastServer.from_manifest(d, max_batch=max_batch,
+                                               max_wait_ms=1.0,
+                                               comm_bits=comm_bits,
+                                               shard_batch=shard_batch)
+        results["routed_queue"] = serve_requests(
+            rserver, requests=128 if quick else 2048, channels=3,
+            stations=rserver.routable_stations())
+        results["routed_queue"]["clusters"] = len(rserver.engines)
+        ratio = (results["routed_queue"]["forecasts_per_sec"]
+                 / results["queue"]["forecasts_per_sec"])
+        results["routed_vs_single_queue"] = ratio
+        print(f"serve_forecast,routed_queue,"
+              f"{results['routed_queue']['forecasts_per_sec']:.0f} forecasts/s,"
+              f"{results['routed_queue']['batches']} batches,"
+              f"x{ratio:.2f} of single-model queue", flush=True)
+
+        results["stream_eval"] = stream_evaluate(
+            rserver, task, series=series, max_windows=4 if quick else None)
+        per = ",".join(
+            f"c{c}={v['rmse']:.4f}"
+            for c, v in results["stream_eval"]["per_cluster"].items())
+        print(f"serve_forecast,stream_eval,"
+              f"{results['stream_eval']['windows']} windows,"
+              f"online_rmse={results['stream_eval']['overall_rmse']:.4f},"
+              f"{per}", flush=True)
 
     save_json("serve_forecast", "results", results)
     return results
@@ -100,5 +179,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: tiny train run + fewer requests")
+    ap.add_argument("--comm-bits", type=int, default=32, choices=(16, 32),
+                    help="16 = bf16-quantized checkpoint restore")
+    ap.add_argument("--shard-batch", action="store_true",
+                    help="shard bucket batch axes over local devices")
     args = ap.parse_args()
-    run(quick=args.quick)
+    run(quick=args.quick, comm_bits=args.comm_bits,
+        shard_batch=args.shard_batch)

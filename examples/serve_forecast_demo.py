@@ -1,35 +1,46 @@
-"""Dataset -> federated training -> checkpoint -> served forecasts, end to
-end through the one API surface:
+"""Dataset -> federated training -> per-cluster checkpoints -> ONE ROUTED
+server -> streaming online evaluation, end to end through the one API surface:
 
-  1. ``get_task("ev", ...)`` builds the clustered EV workload;
-  2. ``run_experiment`` federates LoGTST per cluster (PSGF-Fed) and writes
-     each cluster's global model via ``repro.checkpoint``;
-  3. ``load_forecaster`` restores a cluster's model from its manifest alone;
-  4. ``ForecastServer`` serves it: jitted ``forward_multivariate``, shape-
-     bucketed padding, donated output buffers, micro-batched request queue.
+  1. ``get_task("ev", clusters=N)`` builds the clustered EV workload;
+  2. ``run_experiment`` federates LoGTST per cluster (PSGF-Fed), writes each
+     cluster's global model via ``repro.checkpoint`` AND the routing manifest
+     (``routing.json``: cluster label -> checkpoint dir + the per-station
+     cluster labels requests are routed by);
+  3. ``ForecastServer.from_manifest`` restores ALL cluster models into one
+     routed server (``--comm-bits 16`` restores bf16-quantized payloads,
+     mirroring ``FLConfig.comm_bits`` on the inference side);
+  4. queued requests route by station across the cluster models and coalesce
+     per (cluster, shape) micro-batch;
+  5. ``stream_evaluate`` replays the held-out windows through the queue in
+     arrival order and reports per-cluster ONLINE RMSE.
 
-  PYTHONPATH=src python examples/serve_forecast_demo.py [--requests 64]
+  PYTHONPATH=src python examples/serve_forecast_demo.py \
+      [--clusters 2] [--quick] [--comm-bits 16] [--requests 64]
 """
 import argparse
-import os
 import tempfile
 
-import numpy as np
-
-from repro.core.forecaster import load_forecaster
 from repro.core.tasks import ExperimentSpec, get_task, run_experiment, task_forecaster
-from repro.launch.serve_forecast import ForecastServer, serve_requests
+from repro.launch.serve_forecast import ForecastServer, serve_requests, stream_evaluate
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clusters", type=int, default=2)
+    ap.add_argument("--comm-bits", type=int, default=32, choices=(16, 32),
+                    help="16 = bf16-quantized checkpoint restore")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer rounds/requests/replay windows")
     ap.add_argument("--ckpt-dir", default=None,
                     help="keep checkpoints here (default: temp dir)")
     args = ap.parse_args()
+    rounds = 4 if args.quick else args.rounds
+    requests = 32 if args.quick else args.requests
 
-    task = get_task("ev", quick=True, clusters=2, num_clients=12, num_days=200)
+    task = get_task("ev", quick=True, clusters=args.clusters,
+                    num_clients=12, num_days=200)
     model = task_forecaster(task, "logtst", quick=True)
     print(f"1) task {task.name}: {task.num_clients} stations, "
           f"{task.clusters} DTW clusters; model {model.name} "
@@ -37,28 +48,41 @@ def main():
 
     spec = ExperimentSpec(task=task, model=model, grid=(("psgf", {}),),
                           local_steps=2, batch_size=16,
-                          max_rounds=args.rounds, patience=args.rounds + 1,
-                          eval_every=args.rounds)
+                          max_rounds=rounds, patience=rounds + 1,
+                          eval_every=rounds)
     ckpt_root = args.ckpt_dir or tempfile.mkdtemp(prefix="serve_forecast_")
-    res = run_experiment(spec, checkpoint_dir=ckpt_root)
+    series = task.series()
+    res = run_experiment(spec, checkpoint_dir=ckpt_root, series=series)
     for r in res["rows"]:
         print(f"2) cluster {r['cluster']}: {r['clients']} clients, "
               f"{r['rounds']} rounds, rmse {r['rmse']:.4f}, "
               f"comm {r['comm_bytes']:.2e} bytes")
+    print(f"   routing manifest: {res['routing_manifest']}")
 
-    # serve the first cluster's global model
-    first = res["rows"][0]
-    ckpt = os.path.join(ckpt_root, f"{first['policy']}_c{first['cluster']}")
-    fc, params, extra = load_forecaster(ckpt)
-    print(f"3) restored {fc.name} from {ckpt} "
-          f"(train rmse {extra['final_rmse']:.4f})")
+    # ONE server restores every cluster's model and routes by station
+    server = ForecastServer.from_manifest(ckpt_root, comm_bits=args.comm_bits,
+                                          max_batch=16, max_wait_ms=1.0)
+    print(f"3) restored {len(server.engines)} cluster models "
+          f"({server.forecaster.name}, {server.forecaster.num_params():,} "
+          f"params each, comm_bits={args.comm_bits}) from {ckpt_root}")
 
-    server = ForecastServer(fc, params, max_batch=16, max_wait_ms=1.0)
-    rep = serve_requests(server, requests=args.requests, channels=3)
-    print(f"4) served {rep['requests']} queued requests x {rep['channels']} "
+    rep = serve_requests(server, requests=requests, channels=3,
+                         stations=server.routable_stations())
+    print(f"4) served {rep['requests']} routed requests x {rep['channels']} "
           f"stations in {rep['seconds']:.3f}s -> "
           f"{rep['forecasts_per_sec']:.0f} forecasts/s "
-          f"({rep['batches']} micro-batches, {rep['padded_slots']} padded slots)")
+          f"({rep['batches']} micro-batches, {rep['padded_slots']} padded "
+          f"slots) across clusters "
+          f"{ {c: s['requests'] for c, s in sorted(server.cluster_stats.items())} }")
+
+    ev = stream_evaluate(server, task, series=series,
+                         max_windows=2 if args.quick else None)
+    per = ", ".join(f"c{c}: {v['rmse']:.4f} ({v['windows']} windows)"
+                    for c, v in ev["per_cluster"].items())
+    print(f"5) streaming replay of the held-out day: {ev['windows']} windows "
+          f"through the queue in {ev['seconds']:.2f}s -> online RMSE "
+          f"{ev['overall_rmse']:.4f} [{per}] "
+          f"({ev['unroutable']} unroutable)")
 
 
 if __name__ == "__main__":

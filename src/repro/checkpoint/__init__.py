@@ -1,1 +1,3 @@
-from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step, read_manifest
+from repro.checkpoint.checkpoint import (latest_step, load_checkpoint,
+                                         quantize_tree, read_manifest,
+                                         save_checkpoint)

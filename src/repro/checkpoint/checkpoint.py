@@ -44,6 +44,26 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -
     return step_dir
 
 
+def quantize_tree(tree, bits: int = 32):
+    """Wire-format payload quantization, mirroring ``FLConfig.comm_bits`` on
+    the inference side: ``bits=16`` round-trips every float leaf through
+    bfloat16 (what a bf16 wire payload reconstructs to), ``bits=32`` is the
+    identity. Integer/bool leaves pass through untouched either way.
+    """
+    if bits == 32:
+        return tree
+    if bits != 16:
+        raise ValueError(f"unsupported payload width: {bits} bits (16 or 32)")
+
+    def q(leaf):
+        leaf = jnp.asarray(leaf)
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        return leaf.astype(jnp.bfloat16).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(q, tree)
+
+
 def load_checkpoint(ckpt_dir: str, template, step: int | None = None):
     """Restore into the structure of ``template``. Returns (tree, extra)."""
     step, manifest = read_manifest(ckpt_dir, step)

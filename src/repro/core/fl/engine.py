@@ -542,6 +542,27 @@ def evaluate_rmse(model_cfg: forecast.ForecastConfig, w_vec, meta, data,
 _CLIENT_STATE_KEYS = frozenset({"w_clients", "adam_m", "adam_v", "adam_t"})
 
 
+def axis0_shardings(mesh_axis: str = "clients", mesh=None):
+    """The ONE axis-0 layout both training and serving shard with: a
+    ``(sharded, replicated)`` NamedSharding pair over a 1-D mesh of all local
+    devices (axis 0 split ``mesh_axis``-ways), or ``None`` on a single device.
+
+    :func:`client_state_shardings` applies it to the FL state's client axis;
+    ``repro.launch.serve_forecast.ForecastServer(shard_batch=True)`` applies
+    the same layout to each inference bucket's batch axis (with the serving
+    mesh from ``repro.launch.mesh.make_batch_mesh``).
+    """
+    devices = jax.devices()
+    if len(devices) <= 1:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    if mesh is None:
+        mesh = jax.make_mesh((len(devices),), (mesh_axis,))
+    return (NamedSharding(mesh, PartitionSpec(mesh_axis)),
+            NamedSharding(mesh, PartitionSpec()))
+
+
 def client_state_shardings(state, mesh_axis: str = "clients"):
     """NamedSharding tree for the FL state: client-axis ``(K, ...)`` leaves
     sharded N-way along axis 0 across the N local devices, server-side
@@ -552,17 +573,14 @@ def client_state_shardings(state, mesh_axis: str = "clients"):
     carry, so the fully-compiled run keeps the client axis distributed
     end-to-end instead of gathering it on dispatch.
     """
-    devices = jax.devices()
-    if len(devices) <= 1:
+    pair = axis0_shardings(mesh_axis)
+    if pair is None:
         return None
-    from jax.sharding import NamedSharding, PartitionSpec
-
-    mesh = jax.make_mesh((len(devices),), (mesh_axis,))
+    sharded, replicated = pair
+    ndev = sharded.mesh.devices.size
     return {
-        k: NamedSharding(mesh, PartitionSpec(mesh_axis)
-                         if k in _CLIENT_STATE_KEYS
-                         and v.shape[0] % len(devices) == 0
-                         else PartitionSpec())
+        k: (sharded if k in _CLIENT_STATE_KEYS and v.shape[0] % ndev == 0
+            else replicated)
         for k, v in state.items()
     }
 

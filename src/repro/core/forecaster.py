@@ -131,10 +131,17 @@ def save_forecaster(ckpt_dir: str, forecaster: Forecaster, params, step: int = 0
     return save_checkpoint(ckpt_dir, step, {"params": params}, extra=meta)
 
 
-def load_forecaster(ckpt_dir: str, step: int | None = None):
+def load_forecaster(ckpt_dir: str, step: int | None = None,
+                    comm_bits: int = 32):
     """Restore ``(Forecaster, params, extra)`` from a checkpoint written by
-    :func:`save_forecaster` (or ``run_fl(checkpoint_dir=...)``)."""
-    from repro.checkpoint import load_checkpoint, read_manifest
+    :func:`save_forecaster` (or ``run_fl(checkpoint_dir=...)``).
+
+    ``comm_bits`` mirrors ``FLConfig.comm_bits`` on the inference side:
+    ``comm_bits=16`` quantizes the restored params through a bf16 wire
+    round-trip (``repro.checkpoint.quantize_tree``) — what a serving replica
+    reconstructs after pulling a 16-bit payload from the trainer.
+    """
+    from repro.checkpoint import load_checkpoint, quantize_tree, read_manifest
 
     step, manifest = read_manifest(ckpt_dir, step)
     cfg_dict = dict(manifest["extra"]["forecast_config"])
@@ -142,4 +149,4 @@ def load_forecaster(ckpt_dir: str, step: int | None = None):
     fc = Forecaster(forecast.ForecastConfig(**cfg_dict))
     tree, extra = load_checkpoint(ckpt_dir, {"params": fc.abstract_params()},
                                   step=step)
-    return fc, tree["params"], extra
+    return fc, quantize_tree(tree["params"], comm_bits), extra

@@ -30,6 +30,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
 import time
 from typing import Optional, Tuple
 
@@ -192,6 +194,48 @@ def run_name(policy: str, overrides: dict) -> str:
     return name
 
 
+ROUTING_MANIFEST = "routing.json"
+
+
+def write_routing_manifest(checkpoint_dir: str, task: ForecastTask,
+                           model: Forecaster, labels: np.ndarray,
+                           rows) -> str:
+    """Index every checkpointed run for the routed serving layer
+    (``ForecastServer.from_manifest``): ``<checkpoint_dir>/routing.json`` maps
+    policy label -> cluster label -> checkpoint subdir, plus the per-station
+    cluster assignment requests are routed by. Format (see the
+    ``repro.launch.serve_forecast`` module docstring for the reader's view)::
+
+        {"task": "ev", "model": "logtst/15",
+         "look_back": 64, "horizon": 2, "clusters": 2,
+         "station_cluster": [0, 1, 0, ...],     # one label per station
+         "policies": {"psgf-s30-f20": {"0": "psgf-s30-f20_c0",
+                                       "1": "psgf-s30-f20_c1"}}}
+
+    Pooled runs (``task.clusters == 0``) write a single cluster ``"0"`` with
+    an all-zeros station map. Clusters skipped for ``min_cluster_clients``
+    have no entry — the server fails only those stations' requests.
+    """
+    policies: dict = {}
+    for r in rows:
+        sub = r["policy"] + ("" if r["cluster"] is None else f"_c{r['cluster']}")
+        policies.setdefault(r["policy"], {})[str(r["cluster"] or 0)] = sub
+    manifest = {
+        "task": task.name,
+        "model": model.name,
+        "look_back": task.look_back,
+        "horizon": task.horizon,
+        "clusters": max(task.clusters, 1),
+        "station_cluster": np.asarray(labels, np.int64).tolist(),
+        "policies": policies,
+    }
+    os.makedirs(checkpoint_dir, exist_ok=True)
+    path = os.path.join(checkpoint_dir, ROUTING_MANIFEST)
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
 def run_experiment(spec: ExperimentSpec, checkpoint_dir: Optional[str] = None,
                    on_row=None, verbose: bool = False,
                    series: Optional[np.ndarray] = None,
@@ -205,7 +249,10 @@ def run_experiment(spec: ExperimentSpec, checkpoint_dir: Optional[str] = None,
     ``policy`` (grid label), ``cluster`` (None when pooled), ``clients``,
     ``rounds``, ``rmse``, ``comm_params``, ``comm_bytes`` and ``train_s``.
     With ``checkpoint_dir``, every trained global model is saved under
-    ``<dir>/<policy>[_c<cluster>]`` in ``load_forecaster`` format.
+    ``<dir>/<policy>[_c<cluster>]`` in ``load_forecaster`` format and a
+    routing manifest (:func:`write_routing_manifest`) indexing cluster label
+    -> checkpoint dir is written at ``<dir>/routing.json`` for
+    ``ForecastServer.from_manifest`` (``result["routing_manifest"]``).
     ``series``/``labels`` accept precomputed data and cluster assignments
     (callers that already generated/clustered for reporting skip the repeat
     DTW pass).
@@ -250,12 +297,16 @@ def run_experiment(spec: ExperimentSpec, checkpoint_dir: Optional[str] = None,
             rows.append(row)
             if on_row is not None:
                 on_row(row)
-    return {
+    result = {
         "task": task.name,
         "model": model.name,
         "cluster_sizes": np.bincount(labels, minlength=max(task.clusters, 1)).tolist(),
         "rows": rows,
     }
+    if checkpoint_dir is not None:
+        result["routing_manifest"] = write_routing_manifest(
+            checkpoint_dir, task, model, labels, rows)
+    return result
 
 
 def main():

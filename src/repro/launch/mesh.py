@@ -26,6 +26,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
+def make_batch_mesh(axis: str = "batch"):
+    """1-D serving mesh over all local devices: the batch axis of each
+    inference bucket shards across it (``ForecastServer(shard_batch=True)``
+    pairs this with ``repro.core.fl.engine.axis0_shardings``)."""
+    return _make_mesh((len(jax.devices()),), (axis,))
+
+
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests/examples on CPU)."""
     n = len(jax.devices())

@@ -1,39 +1,79 @@
-"""Forecast serving endpoint: restore a federated checkpoint and serve it.
+"""Forecast serving endpoint: restore federated checkpoints and serve them.
 
 The deployable artifact of the paper's system is the trained GLOBAL
-forecaster (per cluster). ``run_fl(checkpoint_dir=...)`` /
-``run_experiment(checkpoint_dir=...)`` write it in ``load_forecaster`` format;
-this module turns that checkpoint into a batched inference endpoint:
+forecaster — ONE PER DTW CLUSTER of charging stations. ``run_fl
+(checkpoint_dir=...)`` / ``run_experiment(checkpoint_dir=...)`` write each
+cluster's model in ``load_forecaster`` format plus a ROUTING MANIFEST; this
+module turns those checkpoints into a batched, routed inference endpoint:
 
   * the step is a jitted ``forward_multivariate`` (one compile per shape
-    bucket) writing into a DONATED per-bucket output buffer — steady-state
-    serving allocates no fresh output arrays;
+    bucket per cluster) writing into a DONATED per-bucket output buffer —
+    steady-state serving allocates no fresh output arrays;
   * ragged request batches are padded up to a small set of SHAPE BUCKETS
     (powers of two up to ``max_batch``) so the jit cache stays bounded no
     matter what batch sizes arrive;
-  * :meth:`ForecastServer.submit` feeds a MICRO-BATCHING queue: a worker
-    thread coalesces single-station requests for up to ``max_wait_ms`` (or
-    until ``max_batch``), groups the coalesced batch by (M, L) shape (one
-    bucketed run per group, so mixed channel counts coexist in one window)
-    and resolves each request's ``Future`` with its own forecast row;
-    malformed requests fail only their own future.
+  * ONE server restores N per-cluster checkpoints
+    (:meth:`ForecastServer.from_manifest`) and routes every request by its
+    station's cluster label; the micro-batching worker coalesces the queue
+    per (cluster, shape) group, so heterogeneous traffic across clusters
+    still coalesces into full buckets. Routed outputs are bit-identical to
+    serving each cluster's checkpoint directly (same compiled step, same
+    buckets — guarded in tests/test_routed_serving.py);
+  * ``shard_batch=True`` shards each bucket's batch axis over the local
+    devices (``repro.launch.mesh.make_batch_mesh`` +
+    ``repro.core.fl.engine.axis0_shardings`` — the same axis-0 layout the FL
+    engine shards client state with); buckets the device count does not
+    divide stay replicated;
+  * ``comm_bits=16`` restores bf16-QUANTIZED payloads
+    (``repro.checkpoint.quantize_tree``), mirroring ``FLConfig.comm_bits`` on
+    the inference side;
+  * :func:`stream_evaluate` is the continuous-evaluation harness: it replays
+    a held-out day of ``ForecastTask`` windows through the queue in arrival
+    order and tracks per-cluster ONLINE RMSE.
+
+Routing manifest format (written by ``repro.core.tasks.run_experiment`` via
+``write_routing_manifest`` at ``<checkpoint_dir>/routing.json``)::
+
+    {"task": "ev", "model": "logtst/15",
+     "look_back": 64, "horizon": 2, "clusters": 2,
+     "station_cluster": [0, 1, 0, ...],     # request routing key
+     "policies": {"psgf-s30-f20": {"0": "psgf-s30-f20_c0",     # cluster ->
+                                   "1": "psgf-s30-f20_c1"}}}   # ckpt subdir
+
+``ForecastServer.from_manifest(root)`` restores every cluster of one policy
+(the only one, unless ``policy=`` picks from a multi-policy grid) and routes
+``submit(x, station=s)`` through ``station_cluster[s]``. A station whose
+cluster has no checkpoint (skipped for ``min_cluster_clients``) fails only
+its own future.
+
+Streaming evaluation usage::
+
+    server = ForecastServer.from_manifest(ckpt_root)
+    rep = stream_evaluate(server, task)      # replays the held-out windows
+    rep["per_cluster"][0]["rmse"]            # online RMSE, cluster 0
 
 CLI (restore + synthetic load, reports forecasts/sec):
 
   PYTHONPATH=src python -m repro.launch.serve_forecast --ckpt-dir CKPT \
       [--requests 256] [--channels 3] [--max-batch 32] [--no-queue]
+  PYTHONPATH=src python -m repro.launch.serve_forecast --manifest ROOT \
+      [--policy P] [--comm-bits 16] [--shard-batch]      # routed serving
 
 Benchmarked in ``benchmarks/serve_forecast.py``; demoed end-to-end (train ->
-checkpoint -> serve) in ``examples/serve_forecast_demo.py``.
+checkpoint -> routed serving -> streaming eval) in
+``examples/serve_forecast_demo.py``.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import queue
 import threading
 import time
 from concurrent.futures import Future
-from typing import Optional, Sequence, Tuple
+from functools import lru_cache
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +82,7 @@ import numpy as np
 from repro.core.forecaster import Forecaster, load_forecaster
 
 _STOP = object()
+_NO_DEFAULT = object()  # multi-cluster servers have no default route
 
 
 def batch_buckets(max_batch: int) -> Tuple[int, ...]:
@@ -55,27 +96,197 @@ def batch_buckets(max_batch: int) -> Tuple[int, ...]:
     return tuple(out)
 
 
-class ForecastServer:
-    """Batched, bucketed, micro-batching inference over one Forecaster."""
+@lru_cache(maxsize=None)
+def _bucket_step(cfg):
+    """ONE jitted donated-buffer step per ForecastConfig. Params are a traced
+    argument, so every cluster engine with the same geometry SHARES this jit
+    (and its XLA compile cache): an N-cluster routed server compiles each
+    (bucket, channels) shape once, not N times."""
+    from repro.core.forecast import forward_multivariate
 
-    def __init__(self, forecaster: Forecaster, params,
+    return jax.jit(
+        lambda p, x, out: out.at[:].set(forward_multivariate(cfg, p, x)),
+        donate_argnums=(2,))
+
+
+class _ClusterEngine:
+    """One restored model's inference machinery: the (config-shared) jitted
+    donated-buffer step plus this model's per-(bucket, channels) output
+    buffers. The routed server holds one engine per cluster and the
+    single-model server is the one-engine degenerate case, so routed and
+    direct serving run EXACTLY the same compiled step on the same params —
+    bit-identical outputs."""
+
+    def __init__(self, forecaster: Forecaster, params, shardings=None):
+        self.forecaster = forecaster
+        self.shardings = shardings  # (sharded, replicated) pair or None
+        self.params = (jax.device_put(params) if shardings is None
+                       else jax.device_put(params, shardings[1]))
+        self._ndev = 1 if shardings is None else shardings[0].mesh.devices.size
+        # (bucket, channels) -> donated output buffer; replaced on every step
+        self._out: Dict[Tuple[int, int], jax.Array] = {}
+        self._step = _bucket_step(forecaster.cfg)
+
+    def run_padded(self, x: np.ndarray, rows: int) -> np.ndarray:
+        """x: (bucket, M, L) already padded to a bucket size. Runs the
+        donated-output step and returns the first ``rows`` live rows COPIED
+        off the buffer — the copy must happen before the buffer is
+        republished to ``self._out``, where a concurrent caller (worker
+        thread + a warmup/predict from another thread) could pop and donate
+        it again."""
+        bucket, M, _ = x.shape
+        T = self.forecaster.cfg.horizon
+        xj = jnp.asarray(x, jnp.float32)
+        shard = self.shardings is not None and bucket % self._ndev == 0
+        if shard:
+            xj = jax.device_put(xj, self.shardings[0])
+        key = (bucket, M)
+        out = self._out.pop(key, None)
+        if out is None:
+            out = jnp.zeros((bucket, M, T), jnp.float32)
+            if shard:
+                out = jax.device_put(out, self.shardings[0])
+        out = self._step(self.params, xj, out)
+        result = np.asarray(out[:rows])
+        self._out[key] = out
+        return result
+
+
+class ForecastServer:
+    """Batched, bucketed, micro-batching inference over one forecaster or a
+    ROUTED family of per-cluster forecasters.
+
+    Single model (the PR 2 surface, unchanged)::
+
+        ForecastServer(forecaster, params).predict(x)
+
+    Multi-cluster routed (``models``: cluster label -> (forecaster, params);
+    ``station_cluster``: per-station routing table)::
+
+        server = ForecastServer.from_manifest(ckpt_root)
+        server.submit(x, station=17)     # routed by station 17's cluster
+        server.predict(x, cluster=1)     # or routed explicitly
+    """
+
+    def __init__(self, forecaster: Optional[Forecaster] = None, params=None,
                  max_batch: int = 32,
                  buckets: Optional[Sequence[int]] = None,
-                 max_wait_ms: float = 2.0):
-        self.forecaster = forecaster
-        self.params = jax.device_put(params)
+                 max_wait_ms: float = 2.0,
+                 *,
+                 models: Optional[Dict] = None,
+                 station_cluster: Optional[Sequence[int]] = None,
+                 shard_batch: bool = False):
+        if models is None:
+            if forecaster is None or params is None:
+                raise ValueError("pass (forecaster, params) or models=")
+            models = {None: (forecaster, params)}
         self.buckets = tuple(sorted(set(buckets or batch_buckets(max_batch))))
         self.max_batch = self.buckets[-1]
         self.max_wait_ms = max_wait_ms
-        # (bucket, channels) -> donated output buffer; replaced on every step
-        self._out = {}
-        self._step = jax.jit(
-            lambda p, x, out: out.at[:].set(forecaster.forward_multivariate(p, x)),
-            donate_argnums=(2,))
+        shardings = None
+        if shard_batch and len(jax.devices()) > 1:
+            from repro.core.fl.engine import axis0_shardings
+            from repro.launch.mesh import make_batch_mesh
+
+            shardings = axis0_shardings("batch", mesh=make_batch_mesh())
+        self.engines = {c: _ClusterEngine(fc, p, shardings)
+                        for c, (fc, p) in models.items()}
+        self.station_cluster = (None if station_cluster is None
+                                else [int(c) for c in station_cluster])
+        self._default = (next(iter(self.engines))
+                         if len(self.engines) == 1 else _NO_DEFAULT)
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
                       "series_served": 0}
+        self.cluster_stats = {c: {"requests": 0, "series_served": 0}
+                              for c in self.engines}
         self._queue: "queue.Queue" = queue.Queue()
         self._worker_thread: Optional[threading.Thread] = None
+
+    # --- restore ----------------------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, step: Optional[int] = None,
+                        comm_bits: int = 32, **kw) -> "ForecastServer":
+        """Single-model server from one ``load_forecaster`` checkpoint;
+        ``comm_bits=16`` restores a bf16-quantized payload."""
+        fc, params, _ = load_forecaster(ckpt_dir, step=step,
+                                        comm_bits=comm_bits)
+        return cls(fc, params, **kw)
+
+    @classmethod
+    def from_manifest(cls, ckpt_root: str, policy: Optional[str] = None,
+                      step: Optional[int] = None, comm_bits: int = 32,
+                      **kw) -> "ForecastServer":
+        """ROUTED server from ``run_experiment``'s routing manifest: restores
+        every cluster checkpoint of ``policy`` (the manifest's only policy by
+        default) and routes requests via its ``station_cluster`` table."""
+        from repro.core.tasks import ROUTING_MANIFEST
+
+        with open(os.path.join(ckpt_root, ROUTING_MANIFEST)) as f:
+            manifest = json.load(f)
+        policies = manifest["policies"]
+        if policy is None:
+            if len(policies) != 1:
+                raise ValueError(
+                    f"manifest has {sorted(policies)}; pass policy=")
+            policy = next(iter(policies))
+        if policy not in policies:
+            raise KeyError(f"unknown policy {policy!r}; "
+                           f"manifest has {sorted(policies)}")
+        models = {}
+        for label, sub in sorted(policies[policy].items(),
+                                 key=lambda kv: int(kv[0])):
+            fc, params, _ = load_forecaster(os.path.join(ckpt_root, sub),
+                                            step=step, comm_bits=comm_bits)
+            models[int(label)] = (fc, params)
+        return cls(models=models,
+                   station_cluster=manifest["station_cluster"], **kw)
+
+    # --- routing ----------------------------------------------------------
+    @property
+    def forecaster(self) -> Forecaster:
+        """The first engine's forecaster (all clusters of one experiment
+        share the config geometry)."""
+        return next(iter(self.engines.values())).forecaster
+
+    @property
+    def params(self):
+        return next(iter(self.engines.values())).params
+
+    def resolve_cluster(self, station=None, cluster=None):
+        """Explicit ``cluster`` wins; else ``station`` routes through the
+        manifest's ``station_cluster`` table; else the single-model default.
+        Raises for unroutable requests (unknown station / cluster without a
+        checkpoint / routed server with neither key)."""
+        if cluster is None and station is not None:
+            if self.station_cluster is None:
+                if self._default is not _NO_DEFAULT:  # single model: no ambiguity
+                    return self._default
+                raise ValueError(
+                    "no routing table: build the server with from_manifest "
+                    "(or station_cluster=) to route by station")
+            s = int(station)
+            if not 0 <= s < len(self.station_cluster):
+                raise KeyError(f"unknown station {s}: manifest covers "
+                               f"{len(self.station_cluster)} stations")
+            cluster = self.station_cluster[s]
+        if cluster is None and None not in self.engines:
+            if self._default is _NO_DEFAULT:
+                raise ValueError(
+                    "multi-cluster server: pass station= or cluster= "
+                    f"(have {sorted(self.engines, key=str)})")
+            cluster = self._default
+        if cluster not in self.engines:
+            raise KeyError(f"no checkpoint for cluster {cluster!r} "
+                           f"(have {sorted(self.engines, key=str)})")
+        return cluster
+
+    def routable_stations(self):
+        """Stations the routing table maps to a RESTORED engine (clusters
+        skipped at training time drop out); empty without a routing table."""
+        if self.station_cluster is None:
+            return []
+        return [s for s, c in enumerate(self.station_cluster)
+                if c in self.engines]
 
     # --- bucketed batch inference -----------------------------------------
     def bucket_for(self, n: int) -> int:
@@ -84,44 +295,42 @@ class ForecastServer:
                 return b
         return self.buckets[-1]
 
-    def _run_bucket(self, x: np.ndarray) -> np.ndarray:
+    def _run_bucket(self, x: np.ndarray, cluster=None) -> np.ndarray:
         """x: (b, M, L) with b <= max_batch. Pads to the bucket, runs the
-        donated-output step, unpads."""
+        cluster engine's donated-output step, unpads."""
         b, M, L = x.shape
+        cluster = self.resolve_cluster(cluster=cluster)
         bucket = self.bucket_for(b)
         if b < bucket:
             x = np.concatenate(
                 [x, np.zeros((bucket - b, M, L), np.float32)], axis=0)
-        key = (bucket, M)
-        out = self._out.pop(key, None)
-        if out is None:
-            out = jnp.zeros((bucket, M, self.forecaster.cfg.horizon),
-                            jnp.float32)
-        out = self._step(self.params, jnp.asarray(x, jnp.float32), out)
-        # copy the live rows off the buffer BEFORE it is donated again
-        result = np.asarray(out[:b])
-        self._out[key] = out
+        result = self.engines[cluster].run_padded(x, b)
         self.stats["batches"] += 1
         self.stats["padded_slots"] += bucket - b
         self.stats["series_served"] += b * M
+        self.cluster_stats[cluster]["series_served"] += b * M
         return result
 
-    def predict(self, x) -> np.ndarray:
-        """x: (b, M, L) for any b (chunked over max_batch) -> (b, M, T)."""
+    def predict(self, x, station=None, cluster=None) -> np.ndarray:
+        """x: (b, M, L) for any b (chunked over max_batch) -> (b, M, T),
+        served by the routed cluster's model."""
+        cluster = self.resolve_cluster(station=station, cluster=cluster)
         x = np.asarray(x, np.float32)
         if x.ndim == 2:  # single request (M, L)
-            return self.predict(x[None])[0]
-        assert x.ndim == 3 and x.shape[-1] == self.forecaster.cfg.look_back, x.shape
-        outs = [self._run_bucket(x[i : i + self.max_batch])
+            return self.predict(x[None], cluster=cluster)[0]
+        look_back = self.engines[cluster].forecaster.cfg.look_back
+        assert x.ndim == 3 and x.shape[-1] == look_back, x.shape
+        outs = [self._run_bucket(x[i : i + self.max_batch], cluster)
                 for i in range(0, x.shape[0], self.max_batch)]
         return outs[0] if len(outs) == 1 else np.concatenate(outs, axis=0)
 
     def warmup(self, channels: int = 1, buckets: Optional[Sequence[int]] = None):
-        """Pre-compile the step for each bucket (compilation off the serving
-        path)."""
-        L = self.forecaster.cfg.look_back
-        for b in buckets or self.buckets:
-            self._run_bucket(np.zeros((b, channels, L), np.float32))
+        """Pre-compile the step for each bucket of EVERY cluster engine
+        (compilation off the serving path)."""
+        for c, eng in self.engines.items():
+            L = eng.forecaster.cfg.look_back
+            for b in buckets or self.buckets:
+                self._run_bucket(np.zeros((b, channels, L), np.float32), c)
 
     # --- micro-batching request queue -------------------------------------
     def start(self):
@@ -131,16 +340,19 @@ class ForecastServer:
         self._worker_thread = threading.Thread(target=self._worker, daemon=True)
         self._worker_thread.start()
 
-    def submit(self, x) -> Future:
-        """Enqueue ONE request (M, L); resolves to its (M, T) forecast.
+    def submit(self, x, station=None, cluster=None) -> Future:
+        """Enqueue ONE request (M, L); resolves to its (M, T) forecast from
+        the routed cluster's model.
 
-        A malformed request (wrong rank or look-back length) fails ONLY its
+        A malformed request (wrong rank or look-back length) or an unroutable
+        one (unknown station, cluster without a checkpoint) fails ONLY its
         own future — it never reaches the queue, so the micro-batch it would
         have been coalesced into is unaffected.
         """
         fut: Future = Future()
-        L = self.forecaster.cfg.look_back
         try:
+            cluster = self.resolve_cluster(station=station, cluster=cluster)
+            L = self.engines[cluster].forecaster.cfg.look_back
             x = np.asarray(x, np.float32)
             if x.ndim != 2 or x.shape[1] != L:
                 raise ValueError(
@@ -149,7 +361,8 @@ class ForecastServer:
             fut.set_exception(exc)
             return fut
         self.stats["requests"] += 1
-        self._queue.put((x, fut))
+        self.cluster_stats[cluster]["requests"] += 1
+        self._queue.put((cluster, x, fut))
         return fut
 
     def stop(self):
@@ -159,15 +372,46 @@ class ForecastServer:
         self._worker_thread.join()
         self._worker_thread = None
 
+    def _run_group(self, cluster, items):
+        """Serve one coalesced (cluster, shape) group; a failure propagates
+        to THIS group's waiters only."""
+        try:
+            ys = self.predict(np.stack([x for _, x, _ in items]),
+                              cluster=cluster)
+            for (_, _, fut), y in zip(items, ys):
+                fut.set_result(y)
+        except Exception as exc:
+            for _, _, fut in items:
+                fut.set_exception(exc)
+
     def _worker(self):
         while True:
             item = self._queue.get()
             if item is _STOP:
                 return
-            batch = [item]
+            # coalesced requests are heterogeneous in routed cluster AND in
+            # (M, L) shape; np.stack over the raw batch would raise and fail
+            # EVERY waiter, so the window coalesces per (cluster, shape)
+            # GROUP and runs one bucket per group. The max_batch cap bounds
+            # the bucket ONE STEP runs, so it too applies per group, not to
+            # the window total — a total cap chronically ran half-empty
+            # buckets under routed traffic (each step's fixed dispatch cost
+            # dominates on small models; ~2.5x routed-queue throughput from
+            # this on the 2-cluster bench). A group that fills dispatches
+            # IMMEDIATELY while the remaining (e.g. minority-cluster) groups
+            # keep coalescing until the deadline or the window cap.
+            # Single-model/single-shape traffic degenerates to the seed
+            # behavior exactly: one group, dispatched at max_batch.
+            groups: dict = {}
+            groups.setdefault((item[0], item[1].shape), []).append(item)
+            total = 1
+            cap = self.max_batch * max(1, len(self.engines))
             deadline = time.perf_counter() + self.max_wait_ms / 1e3
             stopping = False
-            while len(batch) < self.max_batch:
+            while total < cap:
+                for k in [k for k, v in groups.items()
+                          if len(v) >= self.max_batch]:
+                    self._run_group(k[0], groups.pop(k))
                 left = deadline - time.perf_counter()
                 if left <= 0:
                     break
@@ -178,42 +422,52 @@ class ForecastServer:
                 if nxt is _STOP:
                     stopping = True
                     break
-                batch.append(nxt)
-            # coalesced requests may have heterogeneous (M, L) shapes (e.g.
-            # different channel counts); np.stack over the raw batch would
-            # raise and fail EVERY waiter, so run one bucket per shape group
-            groups: dict = {}
-            for x, fut in batch:
-                groups.setdefault(x.shape, []).append((x, fut))
-            for items in groups.values():
-                try:
-                    ys = self.predict(np.stack([x for x, _ in items]))
-                    for (_, fut), y in zip(items, ys):
-                        fut.set_result(y)
-                except Exception as exc:  # propagate to this group's waiters
-                    for _, fut in items:
-                        fut.set_exception(exc)
+                groups.setdefault((nxt[0], nxt[1].shape), []).append(nxt)
+                total += 1
+            for (c, _), items in groups.items():
+                self._run_group(c, items)
             if stopping:
                 return
 
 
 def serve_requests(server: ForecastServer, requests: int, channels: int,
-                   seed: int = 0, use_queue: bool = True) -> dict:
+                   seed: int = 0, use_queue: bool = True,
+                   stations: Optional[Sequence[int]] = None) -> dict:
     """Push ``requests`` synthetic (M, L) queries through the server and
-    report wall time + forecasts/sec (a forecast = one series' horizon)."""
+    report wall time + forecasts/sec (a forecast = one series' horizon).
+    ``stations`` routes request i to ``stations[i % len(stations)]`` (routed
+    servers); default is the single-model path."""
     L = server.forecaster.cfg.look_back
     rng = np.random.default_rng(seed)
     xs = rng.standard_normal((requests, channels, L)).astype(np.float32)
+    sts = None if stations is None else [int(s) for s in stations]
+    if sts is not None and not sts:
+        raise ValueError(
+            "stations is empty — no routable stations (every cluster in the "
+            "manifest skipped or missing a checkpoint?)")
+    station_of = (lambda i: None) if sts is None else (lambda i: sts[i % len(sts)])
     server.warmup(channels)
     base = dict(server.stats)  # exclude warmup batches from the report
     t0 = time.perf_counter()
     if use_queue:
         server.start()
-        futs = [server.submit(x) for x in xs]
+        futs = [server.submit(x, station=station_of(i))
+                for i, x in enumerate(xs)]
         ys = [f.result(timeout=60) for f in futs]
         server.stop()
-    else:
+    elif sts is None:
         ys = list(server.predict(xs))
+    else:
+        # direct routed mode: one batched predict per cluster
+        ys = [None] * requests
+        by_cluster: dict = {}
+        for i in range(requests):
+            c = server.resolve_cluster(station=station_of(i))
+            by_cluster.setdefault(c, []).append(i)
+        for c, idxs in by_cluster.items():
+            out = server.predict(xs[idxs], cluster=c)
+            for i, y in zip(idxs, out):
+                ys[i] = y
     secs = time.perf_counter() - t0
     assert len(ys) == requests and ys[0].shape == (
         channels, server.forecaster.cfg.horizon)
@@ -225,14 +479,103 @@ def serve_requests(server: ForecastServer, requests: int, channels: int,
         "batches": server.stats["batches"] - base["batches"],
         "padded_slots": server.stats["padded_slots"] - base["padded_slots"],
         "mode": "queue" if use_queue else "direct",
+        "routed": sts is not None,
+    }
+
+
+def stream_evaluate(server: ForecastServer, task, series=None,
+                    max_windows: Optional[int] = None,
+                    timeout: float = 120.0) -> dict:
+    """Streaming/continuous evaluation: replay the task's HELD-OUT test
+    windows through the micro-batching queue in arrival order (every
+    station's window w before any station's window w+1 — the request pattern
+    of a live day) and track per-cluster ONLINE RMSE as the forecasts
+    resolve.
+
+    Each window submits its look-back as a single-channel ``(1, L)`` request
+    routed by the window's ORIGINAL station id (cleaning drops stations, so
+    routing uses ``client_data``'s kept-index map); its horizon is the truth
+    the resolved forecast is scored against. Stations whose cluster has no
+    checkpoint are counted in ``unroutable`` and excluded from the RMSE;
+    any OTHER failure (e.g. a task/checkpoint look-back mismatch) raises.
+
+    Returns ``{"overall_rmse", "windows", "unroutable", "seconds",
+    "per_cluster": {label: {"rmse", "windows"}}}``.
+    """
+    if series is None:
+        series = task.series()
+    tr, va, te, info = task.client_data(series)
+    stations = np.asarray(info["kept"])
+    L, T = task.look_back, task.horizon
+    n_win = te.shape[1] if max_windows is None else min(max_windows, te.shape[1])
+
+    def cluster_of(s: int):
+        """The cluster that will actually serve station ``s`` — the server's
+        own routing, so RMSE attribution can never drift from it. None for
+        unroutable stations (their futures fail and are tallied anyway)."""
+        try:
+            return server.resolve_cluster(station=s)
+        except (KeyError, ValueError):
+            return None
+
+    server.warmup(channels=1)  # replay buckets compile OFF the timed path
+    running = server._worker_thread is not None
+    if not running:
+        server.start()
+    pending = []  # (cluster, truth, future)
+    t0 = time.perf_counter()
+    try:
+        for w in range(n_win):
+            for k, s in enumerate(np.asarray(stations).tolist()):
+                x = te[k, w, :L][None].astype(np.float32)      # (1, L)
+                pending.append((cluster_of(s), te[k, w, L:],
+                                server.submit(x, station=s)))
+        sse: dict = {}
+        cnt: dict = {}
+        unroutable = 0
+        for c, y_true, fut in pending:
+            try:
+                y_hat = fut.result(timeout=timeout)[0]         # (T,)
+            except KeyError:      # routing failure ONLY; shape errors raise
+                unroutable += 1
+                continue
+            err = float(np.sum((np.asarray(y_hat, np.float64)
+                                - np.asarray(y_true, np.float64)) ** 2))
+            sse[c] = sse.get(c, 0.0) + err
+            cnt[c] = cnt.get(c, 0) + 1
+    finally:
+        if not running:
+            server.stop()
+    secs = time.perf_counter() - t0
+    per_cluster = {c: {"rmse": float(np.sqrt(sse[c] / (cnt[c] * T))),
+                       "windows": cnt[c]} for c in sorted(cnt, key=str)}
+    total_cnt = sum(cnt.values())
+    return {
+        "overall_rmse": (float(np.sqrt(sum(sse.values()) / (total_cnt * T)))
+                         if total_cnt else float("nan")),
+        "windows": total_cnt,
+        "unroutable": unroutable,
+        "seconds": secs,
+        "per_cluster": per_cluster,
     }
 
 
 def main():
     ap = argparse.ArgumentParser(
-        description="restore an FL forecaster checkpoint and serve it")
-    ap.add_argument("--ckpt-dir", required=True)
+        description="restore FL forecaster checkpoints and serve them")
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--ckpt-dir", help="single-model checkpoint dir")
+    src.add_argument("--manifest",
+                     help="experiment root containing routing.json "
+                          "(multi-cluster routed serving)")
+    ap.add_argument("--policy", default=None,
+                    help="grid policy to serve from a multi-policy manifest")
     ap.add_argument("--step", type=int, default=None)
+    ap.add_argument("--comm-bits", type=int, default=32, choices=(16, 32),
+                    help="16 = bf16-quantized restore (FLConfig.comm_bits "
+                         "mirrored on the inference side)")
+    ap.add_argument("--shard-batch", action="store_true",
+                    help="shard each bucket's batch axis over local devices")
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--channels", type=int, default=3)
     ap.add_argument("--max-batch", type=int, default=32)
@@ -241,17 +584,31 @@ def main():
                     default=True, help="micro-batching queue vs direct batches")
     args = ap.parse_args()
 
-    fc, params, extra = load_forecaster(args.ckpt_dir, step=args.step)
-    print(f"restored {fc.name} ({fc.num_params():,} params) "
-          f"from {args.ckpt_dir} extra={ {k: v for k, v in extra.items() if k != 'forecast_config'} }")
-    server = ForecastServer(fc, params, max_batch=args.max_batch,
-                            max_wait_ms=args.max_wait_ms)
+    kw = dict(max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+              shard_batch=args.shard_batch)
+    if args.manifest:
+        server = ForecastServer.from_manifest(
+            args.manifest, policy=args.policy, step=args.step,
+            comm_bits=args.comm_bits, **kw)
+        stations = server.routable_stations()
+        print(f"restored {len(server.engines)} cluster models "
+              f"({server.forecaster.name}, {server.forecaster.num_params():,} "
+              f"params each) from {args.manifest}; routing "
+              f"{len(stations)}/{len(server.station_cluster)} stations")
+    else:
+        server = ForecastServer.from_checkpoint(
+            args.ckpt_dir, step=args.step, comm_bits=args.comm_bits, **kw)
+        stations = None
+        fc = server.forecaster
+        print(f"restored {fc.name} ({fc.num_params():,} params) "
+              f"from {args.ckpt_dir}")
     rep = serve_requests(server, args.requests, args.channels,
-                         use_queue=args.queue)
+                         use_queue=args.queue, stations=stations)
     print(f"served {rep['requests']} requests x {rep['channels']} series in "
           f"{rep['seconds']:.3f}s -> {rep['forecasts_per_sec']:.0f} "
           f"forecasts/s ({rep['batches']} batches, "
-          f"{rep['padded_slots']} padded slots, {rep['mode']})")
+          f"{rep['padded_slots']} padded slots, {rep['mode']}"
+          f"{', routed' if rep['routed'] else ''})")
 
 
 if __name__ == "__main__":

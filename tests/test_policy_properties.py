@@ -1,0 +1,146 @@
+"""Property-based guards for every FL gating policy (repro/core/fl/policies.py).
+
+Three invariants the engine's accounting and round math rely on, checked for
+ALL policies at both granularities:
+
+  * BYTE ACCOUNTING — ``gate_bytes`` must equal ``gate_count * comm_bits / 8``
+    for the realized gates of any policy/key/selection (comm_bits = 8 *
+    itemsize of the client leaves: float32 payloads are 32-bit wires);
+  * IDEMPOTENCE — realized gates are exact 0/1 indicators (``g * g == g``),
+    so applying ``mix_down`` twice with the same gates is bit-identical to
+    applying it once (re-delivering a downlink payload is a no-op);
+  * PERMUTATION INVARIANCE — ``aggregate`` must not depend on client order:
+    permuting the client axis of (weights, gates, selection) together leaves
+    the global model unchanged (up to float summation order).
+
+Each property runs as a hypothesis test (via tests/hypothesis_compat.py —
+skips cleanly when hypothesis is not installed) AND as a deterministic seed
+sweep so the invariants stay covered either way.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st  # optional-dep guard
+
+from repro.core.fl import engine as E
+from repro.core.fl import masks as M
+from repro.core.fl import policies as pol
+
+
+def element_policies(share: float, fwd: float):
+    return [
+        pol.OnlineFed(),
+        pol.PSOFed(share_ratio=share),
+        pol.PSGFFed(share_ratio=share, forward_ratio=fwd),
+        pol.PSGFTopK(share_ratio=share, forward_ratio=fwd),
+    ]
+
+
+def _element_setup(seed: int, K: int, D: int):
+    kg, kc, ksel, ks, kf, ku = jax.random.split(jax.random.PRNGKey(seed), 6)
+    global_tree = jax.random.normal(kg, (D,))
+    client_tree = jax.random.normal(kc, (K, D))
+    selected = M.select_clients(ksel, K, 0.5)
+    return global_tree, client_tree, selected, (ks, kf), ku
+
+
+def _leaf_setup(seed: int, K: int):
+    kg, kc, ksel, ks, kf, ku = jax.random.split(jax.random.PRNGKey(seed), 6)
+    global_tree = {"a": jax.random.normal(kg, (3, 2)),
+                   "b": jax.random.normal(kg, (5,))}
+    client_tree = {"a": jax.random.normal(kc, (K, 3, 2)),
+                   "b": jax.random.normal(kc, (K, 5))}
+    selected = M.select_clients(ksel, K, 0.5)
+    return global_tree, client_tree, selected, (ks, kf), ku
+
+
+def _realized_gates(policy, setup):
+    global_tree, client_tree, selected, down_keys, up_key = setup
+    return (policy.downlink_gates(down_keys, global_tree, client_tree, selected),
+            policy.uplink_gates(up_key, global_tree, client_tree, selected))
+
+
+def _check_byte_accounting(gates, client_tree):
+    count = float(E.gate_count(gates, client_tree))
+    nbytes = float(E.gate_bytes(gates, client_tree))
+    comm_bits = 8 * jnp.dtype(
+        jax.tree_util.tree_leaves(client_tree)[0].dtype).itemsize
+    assert nbytes == count * comm_bits / 8
+
+
+def _check_idempotent(gates, client_tree, global_tree):
+    for g in jax.tree_util.tree_leaves(gates):
+        gnp = np.asarray(g)
+        assert set(np.unique(gnp)).issubset({0.0, 1.0}), "gates must be 0/1"
+        np.testing.assert_array_equal(gnp * gnp, gnp)
+    once = E.mix_down(client_tree, global_tree, gates)
+    twice = E.mix_down(once, global_tree, gates)
+    for a, b in zip(jax.tree_util.tree_leaves(once),
+                    jax.tree_util.tree_leaves(twice)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _check_permutation_invariant(setup, up_gates, perm):
+    global_tree, client_tree, selected, _, _ = setup
+    ref = E.aggregate(client_tree, global_tree, up_gates, selected)
+    p_clients = jax.tree_util.tree_map(lambda l: l[perm], client_tree)
+    p_gates = jax.tree_util.tree_map(lambda g: g[perm], up_gates)
+    out = E.aggregate(p_clients, global_tree, p_gates, selected[perm])
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def _run_all_checks(seed: int, K: int, D: int, share: float, fwd: float):
+    perm = np.random.default_rng(seed).permutation(K)
+    for policy in element_policies(share, fwd):
+        setup = _element_setup(seed, K, D)
+        down, up = _realized_gates(policy, setup)
+        _check_byte_accounting(down, setup[1])
+        _check_byte_accounting(up, setup[1])
+        _check_idempotent(down, setup[1], setup[0])
+        _check_idempotent(up, setup[1], setup[0])
+        _check_permutation_invariant(setup, up, perm)
+    leaf_setup = _leaf_setup(seed, K)
+    down, up = _realized_gates(
+        pol.LeafPSGF(share_ratio=share, forward_ratio=fwd), leaf_setup)
+    _check_byte_accounting(down, leaf_setup[1])
+    _check_byte_accounting(up, leaf_setup[1])
+    _check_idempotent(down, leaf_setup[1], leaf_setup[0])
+    _check_idempotent(up, leaf_setup[1], leaf_setup[0])
+    _check_permutation_invariant(leaf_setup, up, perm)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), K=st.integers(2, 8),
+       D=st.integers(4, 48), share=st.floats(0.05, 0.95),
+       fwd=st.floats(0.05, 0.95))
+def test_policy_properties_hypothesis(seed, K, D, share, fwd):
+    """Arbitrary seeds/shapes/ratios: byte accounting, 0/1 idempotent gates,
+    permutation-invariant aggregation — every policy, both granularities."""
+    _run_all_checks(seed, K, D, share, fwd)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_policy_properties_deterministic(seed):
+    """The same property sweep on pinned seeds, so the invariants stay
+    covered when hypothesis is not installed (tier-1 optional extra)."""
+    _run_all_checks(seed, K=5, D=24, share=0.3, fwd=0.2)
+
+
+def test_gate_bytes_arbitrary_external_masks():
+    """Byte accounting holds for gates NOT produced by any policy (the
+    public-API path: callers may feed engine.sync_round external masks)."""
+    rng = np.random.default_rng(3)
+    client_tree = jnp.asarray(rng.standard_normal((6, 17)), jnp.float32)
+    gates = jnp.asarray(rng.integers(0, 2, (6, 17)), jnp.float32)
+    _check_byte_accounting(gates, client_tree)
+    # leaf-granularity scalar gates over a (K, 4, 3) leaf: one gate entry
+    # covers 12 elements -> 48 bytes each
+    leaf = jnp.asarray(rng.standard_normal((6, 4, 3)), jnp.float32)
+    lg = jnp.asarray(rng.integers(0, 2, (6, 1, 1)), jnp.float32)
+    assert float(E.gate_bytes(lg, leaf)) == float(E.gate_count(lg, leaf)) * 4.0
+    assert float(E.gate_count(lg, leaf)) == float(jnp.sum(lg)) * 12
