@@ -11,7 +11,7 @@ into one dispatch:
     chunks carries ``(best_loss, stall, stop)`` on-device and the per-chunk
     RMSE is computed in-graph, so the host reads results back exactly once.
 
-Two measurements seed the perf trajectory of the round hot path:
+Three measurements seed the perf trajectory of the round hot path:
 
   * ``driver`` — rounds/sec of each driver on a dispatch-bound micro-model
     (50 rounds, ``eval_every=5`` so scan pays 10 host round-trips that the
@@ -27,11 +27,21 @@ Two measurements seed the perf trajectory of the round hot path:
   * ``scaling`` — wall time of a chunked-vmap round at num_clients=512
     (``FLConfig.client_chunk``), the regime the scan/while drivers + chunking
     are for (paper uses 58 clients; related FL-for-EV work studies thousands).
+  * ``streaming`` — materialized ``(K, n_win, L+T)`` windows vs the raw
+    ``(K, T)`` streaming pipeline (``FLConfig.streaming_windows``) on the
+    while driver: training-data device bytes (the H2D payload on a real
+    accelerator), live device-buffer bytes after the run
+    (``jax.live_arrays()``), host-transfer counts and rounds/sec. Streaming
+    must keep the while driver's one-dispatch property (h2d pinned at 22 on
+    the micro-bench) and rounds/sec within 10% while cutting training-data
+    memory ~``(L+T)``x — measured at the CI micro config AND at
+    num_clients=512 with the full preset's look_back=128 (``--quick`` runs
+    only the micro config). RMSE must match BITWISE between the layouts.
 
   PYTHONPATH=src python -m benchmarks.fl_rounds [--quick]
 
-``--quick`` (the CI smoke) still covers ALL THREE drivers; it only trims
-repetitions and skips the 512-client scaling run.
+``--quick`` (the CI smoke) still covers ALL THREE drivers and the streaming
+micro A/B; it only trims repetitions and skips the 512-client runs.
 
 Results -> experiments/fl_rounds/results.json.
 """
@@ -56,10 +66,11 @@ from benchmarks.common import save_json
 DRIVERS = ("loop", "scan", "while")
 
 
-def _data(num_clients: int, look_back: int, horizon: int, num_days: int = 40):
+def _data(num_clients: int, look_back: int, horizon: int, num_days: int = 40,
+          streaming: bool = False):
     task = get_task("nn5", seed=0, num_clients=num_clients, num_days=num_days,
                     look_back=look_back, horizon=horizon)
-    tr, va, te, _ = task.client_data(task.series())
+    tr, va, te, _ = task.client_data(task.series(), streaming=streaming)
     return jnp.asarray(tr), jnp.asarray(te)
 
 
@@ -163,8 +174,107 @@ def bench_scaling(num_clients: int = 512, client_chunk: int = 64,
     return row
 
 
+def _live_device_bytes() -> int:
+    """Total bytes of all live device buffers — the residency snapshot the
+    streaming A/B compares (taken while the run's data + state are still
+    referenced, so the training-data buffers dominate)."""
+    return int(sum(a.nbytes for a in jax.live_arrays()))
+
+
+def bench_streaming_case(name: str, model_cfg, fl_kw: dict, data_kw: dict,
+                         rounds: int, eval_every: int, reps: int = 2):
+    """ONE materialized-vs-streaming A/B on the while driver: same model,
+    same FLConfig, same seed — only the data layout (and the matching
+    ``streaming_windows`` flag) differs. Records training-data device bytes
+    (== the H2D payload for the training data on a real accelerator; the CPU
+    backend's transfer guard logs only per-dispatch operand shipments, which
+    are counted separately), live device-buffer bytes after the run, transfer
+    counts and best-of-reps rounds/sec. The layouts must agree on RMSE
+    BITWISE — same RNG, same gathered values."""
+    out = {}
+    for mode in ("materialized", "streaming"):
+        streaming = mode == "streaming"
+        tr, te = _data(streaming=streaming, **data_kw)
+        fl_cfg = FLConfig(streaming_windows=streaming, **fl_kw)
+        best, hist, transfers = _time_driver(model_cfg, fl_cfg, tr, te,
+                                             rounds, "while", eval_every, reps)
+        out[mode] = {
+            "train_shape": list(tr.shape),
+            "test_shape": list(te.shape),
+            "train_data_bytes": int(tr.nbytes + te.nbytes),
+            "live_device_bytes": _live_device_bytes(),
+            "transfers": transfers,
+            "rounds_per_sec": rounds / best,
+            "final_rmse": hist["final_rmse"],
+        }
+        print(f"fl_rounds,streaming_{name},{mode},"
+              f"data={out[mode]['train_data_bytes'] / 1e6:.3f}MB,"
+              f"live={out[mode]['live_device_bytes'] / 1e6:.3f}MB,"
+              f"{rounds / best:.1f} rounds/s,"
+              f"h2d={transfers['host_to_device']},"
+              f"rmse={hist['final_rmse']:.6f}", flush=True)
+        del tr, te, hist  # drop this layout's buffers before the next snapshot
+    mat, st = out["materialized"], out["streaming"]
+    out["train_data_reduction"] = mat["train_data_bytes"] / st["train_data_bytes"]
+    out["live_bytes_reduction"] = mat["live_device_bytes"] / st["live_device_bytes"]
+    out["rounds_per_sec_ratio"] = st["rounds_per_sec"] / mat["rounds_per_sec"]
+    out["rmse_bitwise_equal"] = mat["final_rmse"] == st["final_rmse"]
+    print(f"fl_rounds,streaming_{name},reduction="
+          f"{out['train_data_reduction']:.1f}x data / "
+          f"{out['live_bytes_reduction']:.1f}x live,"
+          f"speed={out['rounds_per_sec_ratio']:.2f}x,"
+          f"rmse_equal={out['rmse_bitwise_equal']}", flush=True)
+    # bit-identity is scoped to the pinned CPU toolchain (the gather vs
+    # direct-indexing HLO may fuse differently elsewhere); other backends
+    # still must agree to tolerance
+    if jax.default_backend() == "cpu":
+        assert out["rmse_bitwise_equal"], \
+            "streaming diverged from materialized — layouts must agree bitwise"
+    else:
+        assert abs(mat["final_rmse"] - st["final_rmse"]) < 1e-5, \
+            "streaming diverged from materialized beyond tolerance"
+    return out
+
+
+def bench_streaming(quick: bool = True):
+    """The streaming-pipeline A/B at two scales: the dispatch-bound micro
+    config (the CI smoke — also guards the while driver's 22-transfer
+    one-dispatch property under streaming) and, in full mode, num_clients=512
+    at the full preset's look_back=128 — the regime the streaming pipeline is
+    FOR (max_rounds*n_win*(L+T) floats of windows vs one (K, T) residency)."""
+    micro_model = get_forecaster(
+        "idformer", look_back=8, horizon=1, d_model=8, num_heads=2, d_ff=8,
+        patch_len=4, stride=4, mixers=("id",)).cfg
+    out = {"micro": bench_streaming_case(
+        "micro", micro_model,
+        fl_kw=dict(policy="psgf", num_clients=4, local_steps=1, batch_size=2),
+        data_kw=dict(num_clients=4, look_back=8, horizon=1),
+        rounds=50, eval_every=5, reps=2 if quick else 5)}
+    for mode in ("materialized", "streaming"):
+        h2d = out["micro"][mode]["transfers"]["host_to_device"]
+        assert h2d <= 22, (
+            f"{mode} while-driver run regressed to {h2d} host transfers "
+            "(pin: 22) — the one-dispatch property broke")
+    if not quick:
+        model_512 = get_forecaster(
+            "logtst", look_back=128, horizon=2, d_model=8, num_heads=2,
+            d_ff=16, patch_len=16, stride=8).cfg
+        out["clients512"] = bench_streaming_case(
+            "512", model_512,
+            fl_kw=dict(policy="psgf", num_clients=512, local_steps=1,
+                       batch_size=4, client_chunk=64),
+            data_kw=dict(num_clients=512, look_back=128, horizon=2,
+                         num_days=420),
+            rounds=2, eval_every=2, reps=1)
+        assert out["clients512"]["train_data_reduction"] >= 10, (
+            "streaming must cut 512-client training-data memory >= 10x, got "
+            f"{out['clients512']['train_data_reduction']:.1f}x")
+    return out
+
+
 def run(quick: bool = True):
-    results = {"driver": bench_driver(rounds=50, reps=2 if quick else 5)}
+    results = {"driver": bench_driver(rounds=50, reps=2 if quick else 5),
+               "streaming": bench_streaming(quick=quick)}
     if not quick:
         results["scaling"] = bench_scaling()
     save_json("fl_rounds", "results", results)
@@ -174,7 +284,8 @@ def run(quick: bool = True):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="driver A/B/C only (CI smoke; still covers loop, "
-                         "scan AND while); skips the 512-client run")
+                    help="driver A/B/C + streaming micro A/B only (CI smoke; "
+                         "still covers loop, scan AND while); skips the "
+                         "512-client runs")
     args = ap.parse_args()
     run(quick=args.quick)

@@ -28,6 +28,11 @@ def main():
                     help="quick preset: small model + fewer rounds for a fast demo")
     ap.add_argument("--ckpt-dir", default=None,
                     help="write per-(policy, cluster) global-model checkpoints")
+    ap.add_argument("--streaming", action="store_true",
+                    help="stream windows from the raw (K, T) series on device "
+                         "(FLConfig.streaming_windows) instead of "
+                         "materializing (K, n_win, L+T) tensors — "
+                         "bit-identical results, ~(L+T)x less data memory")
     args = ap.parse_args()
     rounds = args.rounds if args.rounds is not None else (30 if args.small else 150)
 
@@ -53,7 +58,8 @@ def main():
     # scan driver: patience is checked at eval_every-round boundaries
     spec = ExperimentSpec(task=task, model=model, grid=grid, select_ratio=0.5,
                           local_steps=4, batch_size=32, max_rounds=rounds,
-                          patience=10, eval_every=25)
+                          patience=10, eval_every=25,
+                          streaming_windows=args.streaming)
     res = run_experiment(
         spec, checkpoint_dir=args.ckpt_dir, series=series, labels=labels,
         on_row=lambda r: print(

@@ -35,6 +35,12 @@ shardings through ``in_shardings`` on its donated carry so the one-dispatch run
 stays client-sharded end-to-end. ``FLConfig.use_pallas_mix`` routes the
 element-granularity downlink mix through the fused ``psgf_mix`` Pallas kernel
 (mix + comm count in one pass over the mask; interpret-mode fallback off-TPU).
+``FLConfig.streaming_windows`` drops the materialized ``(K, n_win, L+T)``
+window tensors entirely: every driver carries only the raw ``(K, T)`` split
+slices and gathers minibatch/eval windows ON DEVICE inside the compiled loop
+(bit-identical states under the same RNG, ~``(L+T)``x less training-data
+memory and H2D traffic — the 512-client ceiling moves from transfer to
+compute).
 
 Entry points:
   * :func:`fl_round` — one global iteration (flat client space);
@@ -100,6 +106,15 @@ class FLConfig:
     # mask instead of separate mix_down + gate_count reductions). Falls back to
     # interpret mode automatically off-TPU; bit-identical either way.
     use_pallas_mix: bool = False
+    # streaming_windows: train and evaluate straight off RAW (K, T) series
+    # slices (repro.data.windowing.client_series_datasets) instead of the
+    # materialized (K, n_win, L+T) window tensor. LocalUpdate turns its
+    # minibatch index draw into a start-index draw and gathers (batch, L+T)
+    # windows from each client's raw row ON DEVICE inside the compiled round
+    # loop; the eval path gathers test windows the same way. Same RNG, same
+    # values -> bit-identical per-round states and RMSE to the materialized
+    # layout, at ~(L+T)x less training-data device memory and H2D traffic.
+    streaming_windows: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -257,9 +272,18 @@ def init_fl_state(model_cfg: forecast.ForecastConfig, fl_cfg: FLConfig, key):
 def _local_update(model_cfg, fl_cfg, meta, w, m, v, t, data, key):
     """Per-client LocalUpdate: ``local_steps`` Adam steps on minibatches.
 
-    data: (n_win, L+T) windows for ONE client. Operates on the flat vector.
+    data: ONE client's ``(n_win, L+T)`` materialized windows, or its raw
+    ``(T,)`` series slice under ``streaming_windows`` — the minibatch draw is
+    then a START-INDEX draw and the ``(batch, L+T)`` windows are gathered from
+    the raw row in one ``jnp`` gather. Window ``i`` of the raw slice is
+    ``data[i : i + L+T]`` == materialized row ``i``, and the index draw uses
+    the same bounds, so both layouts see bit-identical minibatches under the
+    same RNG. Operates on the flat vector.
     """
     Lb = model_cfg.look_back
+    streaming = data.ndim == 1
+    n_win = data.shape[0] - (Lb + model_cfg.horizon) + 1 if streaming \
+        else data.shape[0]
 
     def loss_vec(wv, x, y):
         params = tree_unflatten_from_vector(wv, meta)
@@ -267,8 +291,12 @@ def _local_update(model_cfg, fl_cfg, meta, w, m, v, t, data, key):
 
     def step(carry, skey):
         w, m, v, t = carry
-        idx = jax.random.randint(skey, (fl_cfg.batch_size,), 0, data.shape[0])
-        batch = data[idx]
+        idx = jax.random.randint(skey, (fl_cfg.batch_size,), 0, n_win)
+        if streaming:
+            offs = jnp.arange(Lb + model_cfg.horizon)
+            batch = data[idx[:, None] + offs[None, :]]   # (batch, L+T)
+        else:
+            batch = data[idx]
         x, y = batch[:, :Lb], batch[:, Lb:]
         loss, g = jax.value_and_grad(loss_vec)(w, x, y)
         t = t + 1
@@ -288,7 +316,10 @@ def _local_update_all(model_cfg, fl_cfg, meta, w, m, v, t, data, keys):
     """LocalUpdate across all K clients: plain vmap, or chunked vmap via
     ``lax.map(batch_size=client_chunk)`` so only ``client_chunk`` clients'
     activations are live at once (the (K, D) state itself stays resident —
-    it is O(K*D), the activations are what explode with K)."""
+    it is O(K*D), the activations are what explode with K). ``data`` is the
+    client-stacked minibatch source in either layout — ``(K, n_win, L+T)``
+    materialized or ``(K, T)`` raw (``streaming_windows``); both map over
+    axis 0."""
     K = w.shape[0]
     xs = (w, m, v, t, data, keys)
     f = lambda w_, m_, v_, t_, d_, k_: _local_update(
@@ -304,7 +335,8 @@ def _local_update_all(model_cfg, fl_cfg, meta, w, m, v, t, data, keys):
 
 
 def _round(state, data, key, model_cfg, fl_cfg, meta, policy):
-    """One global FL iteration. data: (K, n_win, L+T)."""
+    """One global FL iteration. data: (K, n_win, L+T) materialized windows or
+    (K, T) raw series (``streaming_windows``) — see :func:`_local_update`."""
     K = fl_cfg.num_clients
     k_sel, k_smask, k_fmask, k_upmask, k_local = jax.random.split(key, 5)
 
@@ -505,27 +537,42 @@ def _rmse_device(model_cfg: forecast.ForecastConfig, w_vec, meta, data,
                  client_chunk: Optional[int] = None):
     """On-device RMSE of the global model over all clients' test windows.
 
-    data: (K, n_win, L+T). With ``client_chunk`` the forward runs per client
-    through ``lax.map(batch_size=client_chunk)`` so at most ``client_chunk *
-    n_win`` windows' activations are live at once (the single flat forward
-    materializes all ``K * n_win`` — OOM at num_clients=512 full-preset). The
-    reduction always runs over the full (K*n, T) prediction matrix in the same
-    order, so the chunked result matches the flat one (bitwise on the pinned
-    CPU toolchain). Returns a scalar jnp array (jit-safe; the while driver
-    calls this inside its one-dispatch loop).
+    data: (K, n_win, L+T) materialized windows, or the raw (K, T) test-split
+    series slice under ``streaming_windows`` — the stride-1 windows are then
+    gathered on device (per client inside the chunked ``lax.map``, so only
+    ``client_chunk`` clients' windows exist at once; the raw slice is the only
+    resident copy of the test data). With ``client_chunk`` the forward runs
+    per client through ``lax.map(batch_size=client_chunk)`` so at most
+    ``client_chunk * n_win`` windows' activations are live at once (the single
+    flat forward materializes all ``K * n_win`` — OOM at num_clients=512
+    full-preset). The reduction always runs over the full (K*n, T) prediction
+    matrix in the same order, so the chunked result matches the flat one and
+    both layouts match each other (bitwise on the pinned CPU toolchain).
+    Returns a scalar jnp array (jit-safe; the while driver calls this inside
+    its one-dispatch loop).
     """
     params = tree_unflatten_from_vector(w_vec, meta)
     Lb = model_cfg.look_back
-    K, n, _ = data.shape
+    H = model_cfg.horizon
+    W = Lb + H
+    streaming = data.ndim == 2
+    K = data.shape[0]
+    n = data.shape[1] - W + 1 if streaming else data.shape[1]
+    widx = jnp.arange(n)[:, None] + jnp.arange(W)[None, :] if streaming else None
     if client_chunk is not None and client_chunk < K:
+        win = (lambda cl: cl[widx]) if streaming else (lambda cl: cl)
         pred = jax.lax.map(
-            lambda cl: forecast.forward(model_cfg, params, cl[:, :Lb]),
+            lambda cl: forecast.forward(model_cfg, params, win(cl)[:, :Lb]),
             data, batch_size=client_chunk)
-        pred = pred.reshape(K * n, model_cfg.horizon)
+        pred = pred.reshape(K * n, H)
+        # (K, n, H) truth gather is O(K*n*H) — horizon-sized, never windowed
+        y = data[:, widx[:, Lb:]] if streaming else data[:, :, Lb:]
     else:
-        x = data[:, :, :Lb].reshape(K * n, Lb)
+        win = data[:, widx] if streaming else data       # (K, n, W)
+        x = win[:, :, :Lb].reshape(K * n, Lb)
         pred = forecast.forward(model_cfg, params, x)
-    y = data[:, :, Lb:].reshape(K * n, model_cfg.horizon)
+        y = win[:, :, Lb:]
+    y = y.reshape(K * n, H)
     return jnp.sqrt(jnp.mean(jnp.square(pred - y)))
 
 
@@ -533,8 +580,10 @@ def evaluate_rmse(model_cfg: forecast.ForecastConfig, w_vec, meta, data,
                   client_chunk: Optional[int] = None) -> float:
     """RMSE of the global model over all clients' test windows.
 
-    data: (K, n_win, L+T). ``client_chunk`` chunks the forward over clients
-    (see :func:`_rmse_device`); ``None`` keeps the single flat forward.
+    data: (K, n_win, L+T) materialized windows or the raw (K, T) test-split
+    slice (streaming — windows gathered on device). ``client_chunk`` chunks
+    the forward over clients (see :func:`_rmse_device`); ``None`` keeps the
+    single flat forward.
     """
     return float(_rmse_device(model_cfg, w_vec, meta, data, client_chunk))
 
@@ -618,6 +667,19 @@ def run_fl(
     """Multi-round FL driver. Returns a history dict with per-round loss,
     cumulative comm, and final RMSE.
 
+    ``train_data``/``test_data`` arrive in one of two layouts, selected by
+    ``fl_cfg.streaming_windows``:
+
+    * materialized (default) — ``(K, n_win, L+T)`` stride-1 window tensors
+      (``repro.data.windowing.client_datasets``);
+    * streaming — the raw ``(K, T)`` train/test split slices
+      (``client_series_datasets``); every driver gathers ``(batch, L+T)``
+      windows on device inside its compiled loop, so the raw slices are the
+      ONLY training-data device residency (~``(L+T)``x less memory and H2D
+      traffic). Same RNG, same gathered values -> per-round states, comm
+      counters and RMSE are bit-identical to the materialized layout on the
+      pinned CPU toolchain (guarded in tests/test_streaming_windows.py).
+
     Drivers (identical round-by-round math — same seed -> same per-round
     states, bitwise on the pinned CPU toolchain; they differ only in how much
     of the run compiles into one dispatch):
@@ -645,6 +707,21 @@ def run_fl(
     """
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    want = 2 if fl_cfg.streaming_windows else 3
+    if train_data.ndim != want or test_data.ndim != want:
+        raise ValueError(
+            f"streaming_windows={fl_cfg.streaming_windows} expects "
+            f"{want}-D train/test data "
+            f"({'raw (K, T) series slices' if want == 2 else 'materialized (K, n_win, L+T) windows'}), "
+            f"got ndim {train_data.ndim}/{test_data.ndim} — build the inputs "
+            f"with repro.data.windowing."
+            f"{'client_series_datasets' if want == 2 else 'client_datasets'}")
+    if fl_cfg.streaming_windows:
+        W = model_cfg.look_back + model_cfg.horizon
+        if min(train_data.shape[1], test_data.shape[1]) < W:
+            raise ValueError(
+                f"raw series slices too short for look_back+horizon={W}: "
+                f"train T={train_data.shape[1]}, test T={test_data.shape[1]}")
     policy = pol.from_config(fl_cfg) if policy is None else policy
     key, init_key = jax.random.split(key)
     state, meta = init_fl_state(model_cfg, fl_cfg, init_key)

@@ -8,7 +8,11 @@ A/B benchmarking (benchmarks/fl_rounds.py).
 
 This module keeps the seed repo's public names (``run_fl``,
 ``evaluate_rmse``) as re-exports; new code should import from
-``repro.core.fl.engine`` directly.
+``repro.core.fl.engine`` directly. Both entry points accept either data
+layout — materialized ``(K, n_win, L+T)`` windows or, with
+``FLConfig.streaming_windows``, the raw ``(K, T)`` split slices from
+``repro.data.windowing.client_series_datasets`` (windows are then gathered on
+device; bit-identical results at ~``(L+T)``x less data memory).
 """
 from __future__ import annotations
 

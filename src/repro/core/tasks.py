@@ -43,7 +43,8 @@ from repro.core.forecaster import Forecaster, get_forecaster, save_forecaster
 from repro.core.fl.engine import FLConfig, run_fl
 from repro.data.clustering import cluster_clients
 from repro.data.synthetic import ev_synthetic, household_synthetic, nn5_synthetic
-from repro.data.windowing import client_datasets
+from repro.data.windowing import (client_datasets, client_series_datasets,
+                                  series_norm_stats)
 
 
 _GENERATORS = {
@@ -81,14 +82,20 @@ class ForecastTask:
         labels, _ = cluster_clients(series, self.clusters, seed=self.cluster_seed)
         return labels
 
-    def client_data(self, series: np.ndarray, idx=None):
+    def client_data(self, series: np.ndarray, idx=None,
+                    streaming: bool = False):
         """clean -> normalize -> window -> split for all clients or a subset.
 
-        Returns ``(train, val, test, info)`` with arrays of shape
-        ``(K, n_win, look_back + horizon)``.
+        Returns ``(train, val, test, info)``: materialized
+        ``(K, n_win, look_back + horizon)`` window tensors by default, or —
+        with ``streaming=True`` — the raw ``(K, T_*)`` split slices for the
+        engine's streaming window pipeline (``FLConfig.streaming_windows``;
+        ~``(look_back + horizon)``x smaller, bit-identical training). Same
+        cleaning, normalization and split boundaries either way.
         """
         sub = series if idx is None else series[idx]
-        return client_datasets(sub, self.look_back, self.horizon)
+        build = client_series_datasets if streaming else client_datasets
+        return build(sub, self.look_back, self.horizon)
 
 
 # Presets mirror the paper's settings (§III.B) at two scales. ``quick`` is the
@@ -160,7 +167,12 @@ class ExperimentSpec:
     on-device early-stop, one dispatch per run) or ``"loop"`` (legacy
     per-round baseline). ``shard_clients`` lays the client axis out across
     local devices (``engine.shard_client_state``); the while driver threads
-    the shardings through ``in_shardings`` on its donated carry."""
+    the shardings through ``in_shardings`` on its donated carry.
+    ``streaming_windows`` feeds every run the raw ``(K, T)`` split slices and
+    sets ``FLConfig.streaming_windows`` so windows are gathered on device
+    (bit-identical results, ~``(look_back + horizon)``x less training-data
+    memory); it is spec-level because it decides the DATA layout — don't set
+    it through per-entry grid overrides."""
 
     task: ForecastTask
     model: Forecaster
@@ -174,11 +186,13 @@ class ExperimentSpec:
     seed: int = 0                 # run key: PRNGKey(seed + cluster)
     driver: str = "scan"
     shard_clients: bool = False
+    streaming_windows: bool = False
 
     def fl_config(self, policy: str, num_clients: int, overrides: dict) -> FLConfig:
         kw = dict(policy=policy, num_clients=num_clients,
                   select_ratio=self.select_ratio, local_steps=self.local_steps,
-                  batch_size=self.batch_size)
+                  batch_size=self.batch_size,
+                  streaming_windows=self.streaming_windows)
         kw.update(overrides)
         return FLConfig(**kw)
 
@@ -199,7 +213,7 @@ ROUTING_MANIFEST = "routing.json"
 
 def write_routing_manifest(checkpoint_dir: str, task: ForecastTask,
                            model: Forecaster, labels: np.ndarray,
-                           rows) -> str:
+                           rows, series: Optional[np.ndarray] = None) -> str:
     """Index every checkpointed run for the routed serving layer
     (``ForecastServer.from_manifest``): ``<checkpoint_dir>/routing.json`` maps
     policy label -> cluster label -> checkpoint subdir, plus the per-station
@@ -209,8 +223,17 @@ def write_routing_manifest(checkpoint_dir: str, task: ForecastTask,
         {"task": "ev", "model": "logtst/15",
          "look_back": 64, "horizon": 2, "clusters": 2,
          "station_cluster": [0, 1, 0, ...],     # one label per station
+         "norm": {"mu": [...], "sd": [...]},    # per-station z-norm stats
          "policies": {"psgf-s30-f20": {"0": "psgf-s30-f20_c0",
                                        "1": "psgf-s30-f20_c1"}}}
+
+    With the raw ``series`` the manifest records each station's normalization
+    stats — the exact per-client ``(mu, sd)`` ``client_datasets`` trained
+    under (per-CLIENT statistics, so they are identical whether computed over
+    the fleet or any cluster subset). ``ForecastServer.from_manifest(...,
+    denormalize=True)`` uses them to serve RAW (unnormalized) requests:
+    normalize the look-back on the way in, rescale the forecast on the way
+    out.
 
     Pooled runs (``task.clusters == 0``) write a single cluster ``"0"`` with
     an all-zeros station map. Clusters skipped for ``min_cluster_clients``
@@ -229,6 +252,10 @@ def write_routing_manifest(checkpoint_dir: str, task: ForecastTask,
         "station_cluster": np.asarray(labels, np.int64).tolist(),
         "policies": policies,
     }
+    if series is not None:
+        mu, sd = series_norm_stats(np.asarray(series))
+        manifest["norm"] = {"mu": mu.ravel().tolist(),
+                           "sd": sd.ravel().tolist()}
     os.makedirs(checkpoint_dir, exist_ok=True)
     path = os.path.join(checkpoint_dir, ROUTING_MANIFEST)
     with open(path, "w") as f:
@@ -272,7 +299,8 @@ def run_experiment(spec: ExperimentSpec, checkpoint_dir: Optional[str] = None,
             idx = None if c is None else np.nonzero(labels == c)[0]
             if idx is not None and len(idx) < task.min_cluster_clients:
                 continue
-            tr, va, te, info = task.client_data(series, idx)
+            tr, va, te, info = task.client_data(
+                series, idx, streaming=spec.streaming_windows)
             fl_cfg = spec.fl_config(policy, tr.shape[0], overrides)
             key = jax.random.PRNGKey(spec.seed + (c or 0))
             t0 = time.time()
@@ -305,7 +333,7 @@ def run_experiment(spec: ExperimentSpec, checkpoint_dir: Optional[str] = None,
     }
     if checkpoint_dir is not None:
         result["routing_manifest"] = write_routing_manifest(
-            checkpoint_dir, task, model, labels, rows)
+            checkpoint_dir, task, model, labels, rows, series=series)
     return result
 
 

@@ -5,5 +5,14 @@ from repro.data.synthetic import (
     ett_like,
     weather_like,
 )
-from repro.data.windowing import make_windows, split_windows, client_datasets
+from repro.data.windowing import (
+    make_windows,
+    split_windows,
+    split_series,
+    client_datasets,
+    client_series,
+    client_series_datasets,
+    series_norm_stats,
+    window_split_counts,
+)
 from repro.data.clustering import dtw_distance_matrix, kmedoids

@@ -37,6 +37,7 @@ Routing manifest format (written by ``repro.core.tasks.run_experiment`` via
     {"task": "ev", "model": "logtst/15",
      "look_back": 64, "horizon": 2, "clusters": 2,
      "station_cluster": [0, 1, 0, ...],     # request routing key
+     "norm": {"mu": [...], "sd": [...]},    # per-station z-norm stats
      "policies": {"psgf-s30-f20": {"0": "psgf-s30-f20_c0",     # cluster ->
                                    "1": "psgf-s30-f20_c1"}}}   # ckpt subdir
 
@@ -44,7 +45,11 @@ Routing manifest format (written by ``repro.core.tasks.run_experiment`` via
 (the only one, unless ``policy=`` picks from a multi-policy grid) and routes
 ``submit(x, station=s)`` through ``station_cluster[s]``. A station whose
 cluster has no checkpoint (skipped for ``min_cluster_clients``) fails only
-its own future.
+its own future. With ``denormalize=True`` the manifest's per-station ``norm``
+stats (the exact z-norm each station trained under) make station-routed
+requests RAW: the look-back is normalized on the way in and the forecast
+rescaled to the station's original units on the way out — no client-side
+knowledge of the training normalization needed.
 
 Streaming evaluation usage::
 
@@ -175,6 +180,7 @@ class ForecastServer:
                  *,
                  models: Optional[Dict] = None,
                  station_cluster: Optional[Sequence[int]] = None,
+                 station_norm: Optional[Tuple] = None,
                  shard_batch: bool = False):
         if models is None:
             if forecaster is None or params is None:
@@ -193,6 +199,13 @@ class ForecastServer:
                         for c, (fc, p) in models.items()}
         self.station_cluster = (None if station_cluster is None
                                 else [int(c) for c in station_cluster])
+        # (mu, sd) per station: when set, station-routed requests are RAW —
+        # normalized in, forecasts denormalized out (see _norm_for)
+        self.station_norm = None
+        if station_norm is not None:
+            mu, sd = station_norm
+            self.station_norm = (np.asarray(mu, np.float32).ravel(),
+                                 np.asarray(sd, np.float32).ravel())
         self._default = (next(iter(self.engines))
                          if len(self.engines) == 1 else _NO_DEFAULT)
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
@@ -215,14 +228,29 @@ class ForecastServer:
     @classmethod
     def from_manifest(cls, ckpt_root: str, policy: Optional[str] = None,
                       step: Optional[int] = None, comm_bits: int = 32,
-                      **kw) -> "ForecastServer":
+                      denormalize: bool = False, **kw) -> "ForecastServer":
         """ROUTED server from ``run_experiment``'s routing manifest: restores
         every cluster checkpoint of ``policy`` (the manifest's only policy by
-        default) and routes requests via its ``station_cluster`` table."""
+        default) and routes requests via its ``station_cluster`` table.
+
+        ``denormalize=True`` loads the manifest's per-station ``norm`` stats
+        so station-routed requests are served in RAW units: the server
+        applies each station's training z-norm to the incoming look-back and
+        rescales the forecast back (``y * sd + mu``). Requests routed by
+        explicit ``cluster=`` stay in normalized units (no station, no
+        stats)."""
         from repro.core.tasks import ROUTING_MANIFEST
 
         with open(os.path.join(ckpt_root, ROUTING_MANIFEST)) as f:
             manifest = json.load(f)
+        if denormalize:
+            if "norm" not in manifest:
+                raise ValueError(
+                    "denormalize=True but the manifest has no 'norm' stats — "
+                    "re-run run_experiment(checkpoint_dir=...) to record "
+                    "per-station normalization")
+            kw["station_norm"] = (manifest["norm"]["mu"],
+                                  manifest["norm"]["sd"])
         policies = manifest["policies"]
         if policy is None:
             if len(policies) != 1:
@@ -280,6 +308,20 @@ class ForecastServer:
                            f"(have {sorted(self.engines, key=str)})")
         return cluster
 
+    def _norm_for(self, station):
+        """The (mu, sd) pair a station-routed RAW request is rescaled with,
+        or None when raw serving is off / the request has no station. Called
+        after ``resolve_cluster``, which already rejects unknown stations
+        (``station_cluster`` and the stats tables cover the same fleet)."""
+        if self.station_norm is None or station is None:
+            return None
+        mu, sd = self.station_norm
+        s = int(station)
+        if not 0 <= s < len(mu):
+            raise KeyError(f"no normalization stats for station {s}: "
+                           f"manifest covers {len(mu)} stations")
+        return float(mu[s]), float(sd[s])
+
     def routable_stations(self):
         """Stations the routing table maps to a RESTORED engine (clusters
         skipped at training time drop out); empty without a routing table."""
@@ -313,8 +355,21 @@ class ForecastServer:
 
     def predict(self, x, station=None, cluster=None) -> np.ndarray:
         """x: (b, M, L) for any b (chunked over max_batch) -> (b, M, T),
-        served by the routed cluster's model."""
+        served by the routed cluster's model. With the server's per-station
+        norm stats loaded (``from_manifest(denormalize=True)``), a
+        station-routed ``x`` is RAW: normalized in, forecast rescaled out.
+        An explicit ``cluster=`` wins the route AND keeps the request in
+        normalized units — station stats apply only to station-routed
+        requests."""
+        if cluster is not None:
+            station = None  # explicit cluster: no station routing, no rescale
         cluster = self.resolve_cluster(station=station, cluster=cluster)
+        norm = self._norm_for(station)
+        if norm is not None:
+            mu, sd = norm
+            y = self.predict((np.asarray(x, np.float32) - mu) / sd,
+                             cluster=cluster)
+            return y * sd + mu
         x = np.asarray(x, np.float32)
         if x.ndim == 2:  # single request (M, L)
             return self.predict(x[None], cluster=cluster)[0]
@@ -342,7 +397,12 @@ class ForecastServer:
 
     def submit(self, x, station=None, cluster=None) -> Future:
         """Enqueue ONE request (M, L); resolves to its (M, T) forecast from
-        the routed cluster's model.
+        the routed cluster's model. With the server's per-station norm stats
+        loaded (``from_manifest(denormalize=True)``), a station-routed ``x``
+        is RAW: normalized before coalescing, and the resolved forecast is
+        rescaled to the station's units (``y * sd + mu``). An explicit
+        ``cluster=`` wins the route AND keeps the request in normalized units
+        (same contract as :meth:`predict`).
 
         A malformed request (wrong rank or look-back length) or an unroutable
         one (unknown station, cluster without a checkpoint) fails ONLY its
@@ -351,19 +411,37 @@ class ForecastServer:
         """
         fut: Future = Future()
         try:
+            if cluster is not None:
+                station = None  # explicit cluster: no station stats
             cluster = self.resolve_cluster(station=station, cluster=cluster)
             L = self.engines[cluster].forecaster.cfg.look_back
             x = np.asarray(x, np.float32)
             if x.ndim != 2 or x.shape[1] != L:
                 raise ValueError(
                     f"request must be (M, look_back={L}), got {x.shape}")
+            norm = self._norm_for(station)
+            if norm is not None:
+                x = (x - norm[0]) / norm[1]
         except Exception as exc:  # incl. ragged/non-numeric asarray failures
             fut.set_exception(exc)
             return fut
         self.stats["requests"] += 1
         self.cluster_stats[cluster]["requests"] += 1
         self._queue.put((cluster, x, fut))
-        return fut
+        if norm is None:
+            return fut
+        mu, sd = norm
+        outer: Future = Future()
+
+        def _rescale(f, outer=outer, mu=mu, sd=sd):
+            exc = f.exception()
+            if exc is not None:
+                outer.set_exception(exc)
+            else:
+                outer.set_result(f.result() * sd + mu)
+
+        fut.add_done_callback(_rescale)
+        return outer
 
     def stop(self):
         if self._worker_thread is None:
@@ -499,6 +577,14 @@ def stream_evaluate(server: ForecastServer, task, series=None,
     checkpoint are counted in ``unroutable`` and excluded from the RMSE;
     any OTHER failure (e.g. a task/checkpoint look-back mismatch) raises.
 
+    The replay windows come from ``client_data`` already NORMALIZED, so the
+    evaluation always runs in normalized units: on a raw-serving server
+    (``from_manifest(denormalize=True)``) routable requests are submitted by
+    the station's resolved CLUSTER — the route is identical, but the
+    station-stats rescale (which would double-normalize these windows) does
+    not apply. Same RMSE as the plain server, guarded in
+    tests/test_routed_serving.py.
+
     Returns ``{"overall_rmse", "windows", "unroutable", "seconds",
     "per_cluster": {label: {"rmse", "windows"}}}``.
     """
@@ -528,8 +614,15 @@ def stream_evaluate(server: ForecastServer, task, series=None,
         for w in range(n_win):
             for k, s in enumerate(np.asarray(stations).tolist()):
                 x = te[k, w, :L][None].astype(np.float32)      # (1, L)
-                pending.append((cluster_of(s), te[k, w, L:],
-                                server.submit(x, station=s)))
+                c = cluster_of(s)
+                # normalized replay windows: on a raw-serving server submit by
+                # resolved cluster (same route, no station-stats rescale);
+                # unroutable stations (c is None) still go by station so the
+                # routing KeyError fails their future and is tallied below
+                fut = (server.submit(x, cluster=c)
+                       if server.station_norm is not None and c is not None
+                       else server.submit(x, station=s))
+                pending.append((c, te[k, w, L:], fut))
         sse: dict = {}
         cnt: dict = {}
         unroutable = 0
@@ -576,6 +669,9 @@ def main():
                          "mirrored on the inference side)")
     ap.add_argument("--shard-batch", action="store_true",
                     help="shard each bucket's batch axis over local devices")
+    ap.add_argument("--denormalize", action="store_true",
+                    help="serve station-routed requests in RAW units via the "
+                         "manifest's per-station norm stats (--manifest only)")
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--channels", type=int, default=3)
     ap.add_argument("--max-batch", type=int, default=32)
@@ -589,7 +685,7 @@ def main():
     if args.manifest:
         server = ForecastServer.from_manifest(
             args.manifest, policy=args.policy, step=args.step,
-            comm_bits=args.comm_bits, **kw)
+            comm_bits=args.comm_bits, denormalize=args.denormalize, **kw)
         stations = server.routable_stations()
         print(f"restored {len(server.engines)} cluster models "
               f"({server.forecaster.name}, {server.forecaster.num_params():,} "

@@ -215,6 +215,79 @@ def test_unroutable_station_fails_only_its_future(rng_key):
     assert server.cluster_stats[0]["requests"] == 2
 
 
+# ---- raw-request serving (per-station norm stats in the manifest) -----------
+
+
+def test_manifest_records_per_station_norm_stats(clustered_ckpts):
+    """run_experiment writes each station's training z-norm (mu, sd) into the
+    routing manifest — the exact per-client stats client_datasets trained
+    under (per-CLIENT statistics, independent of the cluster grouping)."""
+    from repro.data.windowing import series_norm_stats
+
+    task, series = clustered_ckpts["task"], clustered_ckpts["series"]
+    with open(os.path.join(clustered_ckpts["root"], ROUTING_MANIFEST)) as f:
+        m = json.load(f)
+    assert len(m["norm"]["mu"]) == len(m["norm"]["sd"]) == task.num_clients
+    mu, sd = series_norm_stats(series)
+    np.testing.assert_allclose(m["norm"]["mu"], mu.ravel())
+    np.testing.assert_allclose(m["norm"]["sd"], sd.ravel())
+    # and they match what client_data actually normalized with (kept subset)
+    tr, va, te, info = task.client_data(series)
+    np.testing.assert_allclose(np.asarray(m["norm"]["mu"])[info["kept"]],
+                               info["norm"][0].ravel())
+
+
+def test_denormalized_serving_raw_requests(clustered_ckpts):
+    """from_manifest(denormalize=True): a RAW look-back routed by station is
+    normalized in and the forecast rescaled out — equal to manually applying
+    the station's stats around a normalized-units predict, on both the
+    predict and the queued submit paths."""
+    root, series = clustered_ckpts["root"], clustered_ckpts["series"]
+    norm_srv = ForecastServer.from_manifest(root, max_batch=8)
+    raw_srv = ForecastServer.from_manifest(root, max_batch=8, max_wait_ms=1.0,
+                                           denormalize=True)
+    mu, sd = raw_srv.station_norm
+    L = raw_srv.forecaster.cfg.look_back
+    s = raw_srv.routable_stations()[0]
+    x_raw = series[s, :L][None].astype(np.float32)        # (1, L), raw units
+    y_raw = raw_srv.predict(x_raw, station=s)
+    y_norm = norm_srv.predict((x_raw - mu[s]) / sd[s], station=s)
+    np.testing.assert_allclose(y_raw, y_norm * sd[s] + mu[s], rtol=1e-6)
+    assert not np.allclose(y_raw, y_norm)  # the rescale actually happened
+    # queued path: the future resolves to the SAME rescaled forecast
+    raw_srv.warmup(channels=1)
+    raw_srv.start()
+    try:
+        fut = raw_srv.submit(x_raw, station=s)
+        np.testing.assert_allclose(fut.result(timeout=60), y_raw, rtol=1e-6)
+    finally:
+        raw_srv.stop()
+    # explicit-cluster requests stay in normalized units (no station stats),
+    # even when a station tags along — cluster wins the route AND the units
+    c = raw_srv.station_cluster[s]
+    x_n = (x_raw - mu[s]) / sd[s]
+    np.testing.assert_array_equal(raw_srv.predict(x_n, cluster=c),
+                                  norm_srv.predict(x_n, cluster=c))
+    np.testing.assert_array_equal(raw_srv.predict(x_n, station=s, cluster=c),
+                                  norm_srv.predict(x_n, cluster=c))
+
+
+def test_denormalize_requires_manifest_stats(clustered_ckpts, tmp_path):
+    """A manifest without norm stats + denormalize=True is a loud error."""
+    root = clustered_ckpts["root"]
+    with open(os.path.join(root, ROUTING_MANIFEST)) as f:
+        m = json.load(f)
+    del m["norm"]
+    stale = tmp_path / "stale"
+    stale.mkdir()
+    with open(stale / ROUTING_MANIFEST, "w") as f:
+        json.dump(m, f)
+    for label, sub in next(iter(m["policies"].values())).items():
+        os.symlink(os.path.join(root, sub), stale / sub)
+    with pytest.raises(ValueError, match="no 'norm' stats"):
+        ForecastServer.from_manifest(str(stale), denormalize=True)
+
+
 # ---- streaming online evaluation --------------------------------------------
 
 
@@ -249,6 +322,22 @@ def test_stream_evaluate_matches_offline_rmse(clustered_ckpts):
                                    rtol=1e-3)
     total = np.sqrt(sum(sse.values()) / (sum(cnt.values()) * task.horizon))
     np.testing.assert_allclose(ev["overall_rmse"], total, rtol=1e-3)
+
+
+def test_stream_evaluate_unaffected_by_denormalize(clustered_ckpts):
+    """stream_evaluate replays NORMALIZED windows, so a raw-serving server
+    must report the same online RMSE as the plain one (regression: station-
+    routed submits used to double-normalize them on denormalize=True)."""
+    task, series = clustered_ckpts["task"], clustered_ckpts["series"]
+    kw = dict(max_batch=8, max_wait_ms=1.0)
+    plain = ForecastServer.from_manifest(clustered_ckpts["root"], **kw)
+    raw = ForecastServer.from_manifest(clustered_ckpts["root"],
+                                       denormalize=True, **kw)
+    ev_p = stream_evaluate(plain, task, series=series, max_windows=2)
+    ev_r = stream_evaluate(raw, task, series=series, max_windows=2)
+    assert ev_r["windows"] == ev_p["windows"] and ev_r["unroutable"] == 0
+    np.testing.assert_allclose(ev_r["overall_rmse"], ev_p["overall_rmse"],
+                               rtol=1e-6)
 
 
 def test_stream_evaluate_single_model(rng_key):
