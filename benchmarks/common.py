@@ -19,6 +19,24 @@ def save_json(subdir: str, name: str, payload: dict):
     return path
 
 
+def record_env(**extra) -> dict:
+    """Hardware/toolchain fingerprint for cross-PR comparability — the ONE
+    env recorder every benchmark embeds in its committed results payload
+    (``extra`` layers benchmark-specific facts on top, e.g. serving dtype or
+    mesh shape)."""
+    import jax
+
+    devs = jax.devices()
+    env = {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind,
+        "num_devices": len(devs),
+        "jax_version": jax.__version__,
+    }
+    env.update(extra)
+    return env
+
+
 def time_call(fn, *args, warmup=2, iters=10):
     """Median wall-time (us) of fn(*args) with block_until_ready."""
     import jax

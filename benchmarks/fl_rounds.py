@@ -38,10 +38,24 @@ Three measurements seed the perf trajectory of the round hot path:
     num_clients=512 with the full preset's look_back=128 (``--quick`` runs
     only the micro config). RMSE must match BITWISE between the layouts.
 
+  * ``participation`` — per-round cohort sampling (``FLConfig.
+    participation``): the while driver's 22-host-transfer pin must hold with
+    sampling compiled into the round, and a same-K A/B (full participation vs
+    a K/16 cohort, identical config otherwise) must show the ~K/S round-cost
+    drop — >= 5x rounds/sec is asserted in full mode — plus the matching
+    comm-byte reduction (bytes accrue only for sampled clients).
+  * ``host_store`` — ``run_fl(driver="host")`` at ``num_clients=100_000``,
+    ``participation=256``: the client fleet (params + Adam moments + raw
+    series) lives in a host-resident numpy ``ClientStore`` and only each
+    round's cohort touches the device. Records rounds/sec, host-store /
+    peak-RSS / live-device bytes, and the exact comm accounting (asserted
+    <= rounds * 2 * S * D params — cohort-only, never O(K)).
+
   PYTHONPATH=src python -m benchmarks.fl_rounds [--quick]
 
-``--quick`` (the CI smoke) still covers ALL THREE drivers and the streaming
-micro A/B; it only trims repetitions and skips the 512-client runs.
+``--quick`` (the CI smoke) still covers ALL THREE drivers, the streaming
+micro A/B and the participation micro pin + a small same-K A/B; it trims
+repetitions and skips the 512-client, 4096-client and 100k-client runs.
 
 Results -> experiments/fl_rounds/results.json.
 """
@@ -61,9 +75,12 @@ from repro.core.fl.engine import FLConfig, run_fl
 from repro.core.forecaster import get_forecaster
 from repro.core.tasks import get_task
 
-from benchmarks.common import save_json
+from benchmarks.common import record_env, save_json
 
 DRIVERS = ("loop", "scan", "while")
+
+_MICRO = dict(look_back=8, horizon=1, d_model=8, num_heads=2, d_ff=8,
+              patch_len=4, stride=4, mixers=("id",))
 
 
 def _data(num_clients: int, look_back: int, horizon: int, num_days: int = 40,
@@ -272,11 +289,141 @@ def bench_streaming(quick: bool = True):
     return out
 
 
+def bench_participation(quick: bool = True):
+    """Per-round cohort sampling (``FLConfig.participation``), two claims:
+
+    1. the while driver's one-dispatch property survives sampling — the
+       cohort gather/scatter compiles INTO the round, so the micro-bench
+       host-transfer pin (22) must hold unchanged;
+    2. same-K economics: at ``participation = K/16`` the round hot path
+       (LocalUpdate + gating on S instead of K clients) must deliver >= 5x
+       rounds/sec at a matching comm-byte cut, with NOTHING else different —
+       same model, same data, same seed, same while driver.
+    """
+    model_cfg = get_forecaster("idformer", **_MICRO).cfg
+    out = {}
+
+    # (1) host-transfer pin under sampling (the streaming micro config with a
+    # half-fleet cohort; same 50-round / eval_every=5 cadence as the pin)
+    tr, te = _data(4, 8, 1, streaming=True)
+    fl_samp = FLConfig(policy="psgf", num_clients=4, local_steps=1,
+                       batch_size=2, streaming_windows=True, participation=2)
+    _, hist, transfers = _time_driver(model_cfg, fl_samp, tr, te, 50, "while",
+                                      5, reps=1)
+    out["micro_sampled"] = {"num_clients": 4, "participation": 2,
+                            "transfers": transfers,
+                            "final_rmse": hist["final_rmse"]}
+    print(f"fl_rounds,participation_micro,K=4,S=2,"
+          f"h2d={transfers['host_to_device']},"
+          f"rmse={hist['final_rmse']:.6f}", flush=True)
+    assert transfers["host_to_device"] <= 22, (
+        f"sampled while-driver run regressed to "
+        f"{transfers['host_to_device']} host transfers (pin: 22) — cohort "
+        "gather/scatter must compile into the round")
+
+    # (2) same-K A/B at a K/16 cohort
+    K = 512 if quick else 4096
+    S = K // 16
+    rounds = 10 if quick else 20
+    tr, te = _data(K, 8, 1, streaming=True)
+    base = dict(policy="psgf", num_clients=K, local_steps=1, batch_size=2,
+                streaming_windows=True, client_chunk=min(64, S))
+    ab = {}
+    for name, part in (("full", None), ("sampled", S)):
+        fl_cfg = FLConfig(participation=part, **base)
+        best, hist, transfers = _time_driver(model_cfg, fl_cfg, tr, te,
+                                             rounds, "while", rounds,
+                                             reps=1 if quick else 3)
+        ab[name] = {"participation": part if part is not None else K,
+                    "seconds": best, "rounds_per_sec": rounds / best,
+                    "final_rmse": hist["final_rmse"],
+                    "comm_params": hist["final_comm"],
+                    "transfers": transfers}
+        print(f"fl_rounds,participation_K{K},{name},"
+              f"{rounds / best:.2f} rounds/s,"
+              f"comm={hist['final_comm']:.3e},"
+              f"rmse={hist['final_rmse']:.4f}", flush=True)
+    ab["speedup_sampled_over_full"] = (ab["sampled"]["rounds_per_sec"]
+                                       / ab["full"]["rounds_per_sec"])
+    ab["comm_reduction"] = (ab["full"]["comm_params"]
+                            / ab["sampled"]["comm_params"])
+    out["same_K"] = {"num_clients": K, "cohort": S, "rounds": rounds, **ab}
+    print(f"fl_rounds,participation_K{K},speedup="
+          f"{ab['speedup_sampled_over_full']:.2f}x,"
+          f"comm_reduction={ab['comm_reduction']:.2f}x", flush=True)
+    if not quick:
+        assert ab["speedup_sampled_over_full"] >= 5.0, (
+            f"participation=K/16 must buy >= 5x rounds/sec, got "
+            f"{ab['speedup_sampled_over_full']:.2f}x")
+    return out
+
+
+def bench_host_store(num_clients: int = 100_000, cohort: int = 256,
+                     rounds: int = 30):
+    """``run_fl(driver="host")`` at deployment scale: the ``(K, D)`` client
+    state + raw ``(K, T)`` series live in a host-resident numpy
+    ``ClientStore`` and only each round's size-``cohort`` rows are ever
+    device-resident. Records rounds/sec, the host/device byte split (store
+    bytes, peak process RSS, live device buffers after the run) and the
+    exact comm accounting — asserted cohort-only: at most
+    ``rounds * 2 * S * D`` shared params regardless of K."""
+    import resource
+
+    model = get_forecaster("idformer", **_MICRO)
+    model_cfg = model.cfg
+    D = model.num_params()
+    task = get_task("nn5", seed=0, num_clients=num_clients, num_days=40,
+                    look_back=8, horizon=1)
+    tr, va, te, _ = task.client_data(task.series(), streaming=True)
+    fl_cfg = FLConfig(policy="psgf", num_clients=num_clients, local_steps=1,
+                      batch_size=2, streaming_windows=True,
+                      participation=cohort, client_chunk=cohort)
+    kw = dict(policy=None, driver="host")
+    run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0), max_rounds=1,
+           patience=2, eval_every=1, **kw)        # warmup/compile
+    t0 = time.perf_counter()
+    hist = run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                  max_rounds=rounds, patience=rounds + 1, eval_every=rounds,
+                  **kw)
+    secs = time.perf_counter() - t0
+    store = hist["client_store"]
+    comm_bound = rounds * 2.0 * cohort * D
+    row = {
+        "num_clients": num_clients, "participation": cohort,
+        "num_params": D, "rounds": rounds, "seconds": secs,
+        "rounds_per_sec": rounds / secs,
+        "host_store_bytes": store.nbytes,
+        "host_store_state_bytes": store.state_nbytes,
+        "host_store_series_bytes": store.series_nbytes,
+        "peak_host_rss_bytes": resource.getrusage(
+            resource.RUSAGE_SELF).ru_maxrss * 1024,
+        "live_device_bytes": _live_device_bytes(),
+        "comm_params": hist["final_comm"],
+        "comm_bytes": hist["final_comm"] * (fl_cfg.comm_bits / 8.0),
+        "comm_cohort_bound_params": comm_bound,
+        "final_rmse": hist["final_rmse"],
+    }
+    print(f"fl_rounds,host_store,K={num_clients},S={cohort},"
+          f"{row['rounds_per_sec']:.2f} rounds/s,"
+          f"store={row['host_store_bytes'] / 1e6:.1f}MB,"
+          f"rss={row['peak_host_rss_bytes'] / 1e6:.1f}MB,"
+          f"live_dev={row['live_device_bytes'] / 1e6:.3f}MB,"
+          f"comm={row['comm_params']:.3e}", flush=True)
+    assert row["comm_params"] <= comm_bound, (
+        f"comm accounting leaked beyond the cohort: {row['comm_params']:.3e} "
+        f"params > bound {comm_bound:.3e} (= rounds * 2 * S * D)")
+    assert np.isfinite(row["final_rmse"])
+    return row
+
+
 def run(quick: bool = True):
-    results = {"driver": bench_driver(rounds=50, reps=2 if quick else 5),
-               "streaming": bench_streaming(quick=quick)}
+    results = {"env": record_env(),
+               "driver": bench_driver(rounds=50, reps=2 if quick else 5),
+               "streaming": bench_streaming(quick=quick),
+               "participation": bench_participation(quick=quick)}
     if not quick:
         results["scaling"] = bench_scaling()
+        results["host_store"] = bench_host_store()
     save_json("fl_rounds", "results", results)
     return results
 
@@ -284,8 +431,8 @@ def run(quick: bool = True):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="driver A/B/C + streaming micro A/B only (CI smoke; "
-                         "still covers loop, scan AND while); skips the "
-                         "512-client runs")
+                    help="driver A/B/C + streaming/participation micro A/Bs "
+                         "only (CI smoke; still covers loop, scan AND "
+                         "while); skips the 512-, 4096- and 100k-client runs")
     args = ap.parse_args()
     run(quick=args.quick)

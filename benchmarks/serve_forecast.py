@@ -42,20 +42,18 @@ from repro.core.forecaster import load_forecaster
 from repro.core.tasks import ExperimentSpec, get_task, run_experiment, task_forecaster
 from repro.launch.serve_forecast import ForecastServer, serve_requests, stream_evaluate
 
-from benchmarks.common import save_json
+from benchmarks.common import record_env, save_json
 
 
 def env_info(comm_bits: int = 32, shard_batch: bool = False) -> dict:
-    """Hardware/layout fingerprint for cross-PR comparability."""
+    """Serving-layer env fingerprint: the shared ``record_env`` plus the
+    serving dtype/mesh facts this benchmark sweeps over."""
     devs = jax.devices()
-    return {
-        "backend": jax.default_backend(),
-        "device_kind": devs[0].device_kind,
-        "num_devices": len(devs),
-        "mesh_shape": ({"batch": len(devs)}
-                       if shard_batch and len(devs) > 1 else None),
-        "serving_dtype": "bfloat16-restore" if comm_bits == 16 else "float32",
-    }
+    return record_env(
+        mesh_shape=({"batch": len(devs)}
+                    if shard_batch and len(devs) > 1 else None),
+        serving_dtype="bfloat16-restore" if comm_bits == 16 else "float32",
+    )
 
 
 def train_checkpoint(ckpt_dir: str, quick: bool = True) -> str:

@@ -33,7 +33,17 @@ def main():
                          "(FLConfig.streaming_windows) instead of "
                          "materializing (K, n_win, L+T) tensors — "
                          "bit-identical results, ~(L+T)x less data memory")
+    ap.add_argument("--participation", default=None,
+                    help="per-round participant cohort: an int cohort size "
+                         "(must fit the smallest cluster) or a float fraction "
+                         "in (0, 1] (FLConfig.participation); only the "
+                         "sampled cohort trains/communicates each round")
     args = ap.parse_args()
+    if args.participation is not None:
+        # "0.25" -> fraction of each cluster, "4" -> fixed cohort size
+        args.participation = (float(args.participation)
+                              if "." in args.participation
+                              else int(args.participation))
     rounds = args.rounds if args.rounds is not None else (30 if args.small else 150)
 
     # quick preset swaps in look_back 64 + the d_model-32 model; data geometry
@@ -59,7 +69,8 @@ def main():
     spec = ExperimentSpec(task=task, model=model, grid=grid, select_ratio=0.5,
                           local_steps=4, batch_size=32, max_rounds=rounds,
                           patience=10, eval_every=25,
-                          streaming_windows=args.streaming)
+                          streaming_windows=args.streaming,
+                          participation=args.participation)
     res = run_experiment(
         spec, checkpoint_dir=args.ckpt_dir, series=series, labels=labels,
         on_row=lambda r: print(

@@ -8,5 +8,6 @@ from repro.core.fl.policies import (
 from repro.core.fl.engine import (
     ACCOUNTING_DTYPE, FLConfig, aggregate, client_state_shardings,
     evaluate_rmse, fl_round, gate_bytes, gate_count, init_fl_state, mix_down,
-    mix_down_count, run_fl, shard_client_state, sync_round,
+    mix_down_count, run_fl, sample_cohort, shard_client_state, sync_round,
 )
+from repro.core.fl.client_store import ClientStore, run_fl_host

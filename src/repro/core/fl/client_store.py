@@ -1,0 +1,255 @@
+"""Host-resident client store: six-figure ``num_clients`` on one host.
+
+The compiled drivers (``run_fl(driver="loop"/"scan"/"while")``) keep the whole
+``(K, D)`` client state device-resident — the right call up to a few thousand
+clients, but at the paper's deployment scale (geographically dispersed EV
+charging stations, ``K`` ~ 1e5) the state alone is gigabytes and only a
+size-``S`` cohort (``FLConfig.participation``) actually trains each round.
+:class:`ClientStore` flips the residency: client params, Adam moments and the
+raw ``(K, T)`` series live in HOST memory (numpy), and :func:`run_fl_host`
+(the ``driver="host"`` path of ``repro.core.fl.engine.run_fl``) transfers
+ONLY the sampled cohort per round:
+
+  1. sample the cohort on host via the exact key chain the compiled drivers
+     use in-graph (``engine.sample_cohort`` on the post-split round key), so
+     the same seed yields the same cohort sequence as every other driver;
+  2. gather the cohort's rows out of the numpy store (one fancy-index per
+     leaf) and ship the ``(S, D)`` slices to the device;
+  3. run the jitted cohort round — ``engine._round_body``, the SAME function
+     every other driver compiles, with donated input buffers;
+  4. scatter the updated rows back into the store and keep only the server
+     state (global vector + comm counters) device-resident.
+
+Per-round H2D traffic is ``O(S * D)`` instead of ``O(K * D)`` residency, so
+``num_clients=100_000`` runs honestly on one host (benchmarks/fl_rounds.py
+records the store/device byte split). Per-round math is bit-identical to the
+device drivers under the same seed on the pinned CPU toolchain — the cohort
+round is literally the same jitted body — guarded in
+tests/test_participation.py.
+
+Evaluation never materializes the fleet either: :meth:`ClientStore.
+evaluate_rmse` streams the held-out raw slices through the forward in
+client chunks (two compiled shapes at most: the chunk and the remainder).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree_utils import tree_flatten_to_vector
+from repro.core import forecast
+from repro.core.fl import engine as E
+from repro.core.fl import policies as pol
+
+# The cohort round: engine._round_body — the same per-round math every
+# compiled driver embeds — jitted standalone with donated cohort buffers
+# (fresh cohort slices arrive every round; their buffers are dead after the
+# scatter, so XLA reuses them in place).
+_cohort_round = partial(
+    jax.jit, static_argnames=("model_cfg", "fl_cfg", "meta", "policy"),
+    donate_argnames=("state",))(E._round_body)
+
+
+@partial(jax.jit, static_argnames=("model_cfg", "meta"))
+def _chunk_sse(w_vec, data, model_cfg, meta):
+    """Sum of squared forecast errors of the global model over one client
+    chunk's raw ``(C, T)`` test slice (stride-1 windows gathered on device —
+    the chunk slice is the only test-data device residency)."""
+    params = E.tree_unflatten_from_vector(w_vec, meta)
+    Lb, H = model_cfg.look_back, model_cfg.horizon
+    W = Lb + H
+    C = data.shape[0]
+    n = data.shape[1] - W + 1
+    widx = jnp.arange(n)[:, None] + jnp.arange(W)[None, :]
+    win = data[:, widx]                                   # (C, n, W)
+    pred = forecast.forward(model_cfg, params,
+                            win[:, :, :Lb].reshape(C * n, Lb))
+    return jnp.sum(jnp.square(pred - win[:, :, Lb:].reshape(C * n, H)))
+
+
+class ClientStore:
+    """Host-resident (numpy) FL client state + raw series store.
+
+    Mirrors ``engine.init_fl_state`` exactly — same init key path, same
+    per-client tiled global vector, zero Adam moments — but allocates the
+    client-axis arrays in host memory. The server-side global vector stays a
+    device array (``w_global``); everything keyed by client is numpy.
+
+    ``train``/``test`` are the raw ``(K, T)`` streaming split slices
+    (``repro.data.windowing.client_series_datasets``) — the store requires
+    ``fl_cfg.streaming_windows`` because the raw layout is what makes cohort
+    swaps cheap (~``(L+T)``x smaller rows than materialized windows).
+    """
+
+    def __init__(self, model_cfg, fl_cfg, train, test, key):
+        if not fl_cfg.streaming_windows:
+            raise ValueError(
+                "ClientStore requires FLConfig.streaming_windows=True: the "
+                "store holds raw (K, T) series slices "
+                "(repro.data.windowing.client_series_datasets)")
+        train = np.ascontiguousarray(np.asarray(train, np.float32))
+        test = np.ascontiguousarray(np.asarray(test, np.float32))
+        if train.ndim != 2 or test.ndim != 2:
+            raise ValueError(
+                f"expected raw (K, T) series slices, got ndim "
+                f"{train.ndim}/{test.ndim}")
+        if train.shape[0] != fl_cfg.num_clients:
+            raise ValueError(
+                f"train series has {train.shape[0]} clients, FLConfig says "
+                f"num_clients={fl_cfg.num_clients}")
+        params = forecast.init_params(model_cfg, key)
+        vec, self.meta = tree_flatten_to_vector(params)
+        self.model_cfg, self.fl_cfg = model_cfg, fl_cfg
+        self.w_global = vec                               # device (D,)
+        K, D = fl_cfg.num_clients, int(vec.shape[0])
+        vec_np = np.asarray(vec)
+        self.w_clients = np.tile(vec_np[None, :], (K, 1))
+        self.adam_m = np.zeros((K, D), np.float32)
+        self.adam_v = np.zeros((K, D), np.float32)
+        self.adam_t = np.zeros((K,), np.int32)
+        self.train = train
+        self.test = test
+
+    @property
+    def state_nbytes(self) -> int:
+        """Host bytes of the client-axis state (params + Adam moments)."""
+        return int(self.w_clients.nbytes + self.adam_m.nbytes
+                   + self.adam_v.nbytes + self.adam_t.nbytes)
+
+    @property
+    def series_nbytes(self) -> int:
+        """Host bytes of the raw train + test series."""
+        return int(self.train.nbytes + self.test.nbytes)
+
+    @property
+    def nbytes(self) -> int:
+        """Total host-resident bytes (client state + series)."""
+        return self.state_nbytes + self.series_nbytes
+
+    def gather(self, cohort: np.ndarray) -> dict:
+        """The cohort's client-axis rows as device arrays (one fancy-index
+        per leaf + one H2D transfer each — ``O(S * D)``, never ``O(K)``)."""
+        return {
+            "w_clients": jnp.asarray(self.w_clients[cohort]),
+            "adam_m": jnp.asarray(self.adam_m[cohort]),
+            "adam_v": jnp.asarray(self.adam_v[cohort]),
+            "adam_t": jnp.asarray(self.adam_t[cohort]),
+        }
+
+    def gather_train(self, cohort: np.ndarray):
+        """The cohort's raw train slices as a device ``(S, T)`` array."""
+        return jnp.asarray(self.train[cohort])
+
+    def scatter(self, cohort: np.ndarray, sub: dict) -> None:
+        """Write a cohort round's updated client rows back into the store."""
+        self.w_clients[cohort] = np.asarray(sub["w_clients"])
+        self.adam_m[cohort] = np.asarray(sub["adam_m"])
+        self.adam_v[cohort] = np.asarray(sub["adam_v"])
+        self.adam_t[cohort] = np.asarray(sub["adam_t"])
+
+    def evaluate_rmse(self, w_vec, client_chunk: Optional[int] = None) -> float:
+        """RMSE of the global model over ALL clients' test windows, streamed
+        from the host store in client chunks (default ``min(K, 1024)``; at
+        most two compiled shapes — the chunk and the remainder). Matches
+        ``engine.evaluate_rmse`` up to float summation order."""
+        K = self.test.shape[0]
+        chunk = client_chunk if client_chunk is not None else min(K, 1024)
+        W = self.model_cfg.look_back + self.model_cfg.horizon
+        n = self.test.shape[1] - W + 1
+        sse = 0.0
+        for i in range(0, K, chunk):
+            part = jnp.asarray(self.test[i:i + chunk])
+            sse += float(_chunk_sse(w_vec, part, self.model_cfg, self.meta))
+        return math.sqrt(sse / (K * n * self.model_cfg.horizon))
+
+
+def run_fl_host(model_cfg, fl_cfg, train_data, test_data, key, *,
+                max_rounds: int = 300, patience: int = 10,
+                eval_every: int = 10, verbose: bool = False, policy=None,
+                checkpoint_dir: Optional[str] = None) -> dict:
+    """The ``run_fl(driver="host")`` implementation: loop-driver round/stop
+    semantics with the ``(K, D)`` client state host-resident and only the
+    per-round cohort on device. See the module docstring for the round cycle
+    and ``engine.run_fl`` for the shared contract; the returned history
+    additionally carries ``history["client_store"]`` (the live
+    :class:`ClientStore`) so callers can read residency stats or keep
+    training."""
+    policy = pol.from_config(fl_cfg) if policy is None else policy
+    key, init_key = jax.random.split(key)
+    store = ClientStore(model_cfg, fl_cfg, train_data, test_data, init_key)
+    W = model_cfg.look_back + model_cfg.horizon
+    if min(store.train.shape[1], store.test.shape[1]) < W:
+        raise ValueError(
+            f"raw series slices too short for look_back+horizon={W}: "
+            f"train T={store.train.shape[1]}, test T={store.test.shape[1]}")
+
+    K, S = fl_cfg.num_clients, fl_cfg.participation_size()
+    meta = store.meta
+    server = {
+        "w_global": store.w_global,
+        "round": jnp.zeros((), jnp.int32),
+        "comm_down": jnp.zeros((), E.ACCOUNTING_DTYPE),
+        "comm_up": jnp.zeros((), E.ACCOUNTING_DTYPE),
+    }
+    full_cohort = np.arange(K)
+
+    history = {"round": [], "train_loss": [], "comm": [], "rmse": []}
+    best_loss = math.inf
+    stall = 0
+    comm_total = 0.0
+    for r in range(max_rounds):
+        key, rk = jax.random.split(key)
+        if S < K:
+            # the device drivers' in-graph key chain, replayed on host:
+            # _round splits (k_cohort, k_round) off the round key
+            k_cohort, rk = jax.random.split(rk)
+            cohort = np.asarray(E.sample_cohort(k_cohort, K, S))
+        else:
+            cohort = full_cohort
+        sub_state = {**server, **store.gather(cohort)}
+        sub_new, metrics = _cohort_round(sub_state, store.gather_train(cohort),
+                                         rk, model_cfg, fl_cfg, meta, policy)
+        store.scatter(cohort, sub_new)
+        server = {k: sub_new[k] for k in server}
+
+        loss = float(metrics["train_loss"])
+        comm_total = float(metrics["comm_total"])
+        history["round"].append(r)
+        history["train_loss"].append(loss)
+        history["comm"].append(comm_total)
+        if (r + 1) % eval_every == 0 or r == max_rounds - 1:
+            rmse = store.evaluate_rmse(server["w_global"], fl_cfg.client_chunk)
+            history["rmse"].append((r, rmse))
+            if verbose:
+                print(f"round {r:4d}  loss {loss:.4f}  rmse {rmse:.4f}  "
+                      f"comm {comm_total:.3e}")
+        if E._improved(loss, best_loss):
+            best_loss = loss
+            stall = 0
+        else:
+            stall += 1
+            if stall >= patience:
+                break
+
+    if history["rmse"] and history["rmse"][-1][0] == len(history["round"]) - 1:
+        final_rmse = history["rmse"][-1][1]
+    else:
+        final_rmse = store.evaluate_rmse(server["w_global"], fl_cfg.client_chunk)
+    state = {
+        "w_global": server["w_global"],
+        "w_clients": store.w_clients,
+        "adam_m": store.adam_m,
+        "adam_v": store.adam_v,
+        "adam_t": store.adam_t,
+        "round": server["round"],
+        "comm_down": server["comm_down"],
+        "comm_up": server["comm_up"],
+    }
+    history["client_store"] = store
+    return E._finalize_history(history, state, meta, model_cfg, fl_cfg,
+                               final_rmse, comm_total, checkpoint_dir)

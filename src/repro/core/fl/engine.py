@@ -42,12 +42,30 @@ slices and gathers minibatch/eval windows ON DEVICE inside the compiled loop
 memory and H2D traffic — the 512-client ceiling moves from transfer to
 compute).
 
+``FLConfig.participation`` caps how many clients take part in any one round:
+each round derives a fresh cohort of ``S`` client indices from the round key
+(:func:`sample_cohort` — a fixed-size slice of a key-seeded permutation, so
+shapes stay static), gathers the cohort's rows out of the ``(K, D)`` store,
+runs the full gate/LocalUpdate/aggregate cycle on the cohort only, and
+scatters the updated rows back. Non-participants exchange NOTHING that round
+(eqs. 3-6 with ``sel_k = 0``): comm counters accrue only the cohort's gates,
+so the accounting stays exact while per-round compute, uplink bytes and live
+activations drop ~``K/S``. A sampled round is bit-identical to a full round
+run on the gathered cohort (guarded in tests/test_participation.py), and
+``participation=K`` (or ``None``) takes the exact unsampled code path — per-
+round states reproduce the unsampled engine bitwise. For ``K`` too large to
+keep client state device-resident at all, ``run_fl(driver="host")`` moves the
+``(K, D)`` store into host memory (``repro.core.fl.client_store``) and
+transfers only the sampled cohort per round.
+
 Entry points:
   * :func:`fl_round` — one global iteration (flat client space);
   * :func:`run_fl`   — multi-round driver (``driver="scan"`` is the compiled
                        default; ``driver="while"`` is the fully-compiled
                        on-device early-stop variant; ``driver="loop"`` keeps
-                       the legacy per-round Python loop for A/B benchmarking);
+                       the legacy per-round Python loop for A/B benchmarking;
+                       ``driver="host"`` is the host-resident client-store
+                       path for six-figure ``num_clients``);
   * :func:`sync_round` — the train-free gate/aggregate/distribute cycle used
                        by ``psgf_dp.psgf_sync`` at leaf granularity.
 """
@@ -115,6 +133,55 @@ class FLConfig:
     # values -> bit-identical per-round states and RMSE to the materialized
     # layout, at ~(L+T)x less training-data device memory and H2D traffic.
     streaming_windows: bool = False
+    # participation: per-round client subsampling. None = every client takes
+    # part every round (the paper's setting and the engine's historical
+    # behavior). An int S >= 1 is an absolute per-round cohort size; a float
+    # in (0, 1] is a fraction of num_clients (resolved by
+    # participation_size()). Each round samples a fresh size-S cohort from the
+    # round key, runs gating/LocalUpdate/aggregation on the cohort ONLY and
+    # scatters the updated rows back into the (K, D) store — comm counters
+    # accrue only the sampled clients' gates (non-participants exchange
+    # nothing: eqs. 3-6 with sel_k = 0). participation == num_clients (and
+    # None) takes the exact unsampled code path: per-round states are
+    # BIT-IDENTICAL to the engine without this knob.
+    participation: Optional[float] = None
+
+    def participation_size(self) -> int:
+        """The resolved per-round cohort size S: ``participation`` as an
+        absolute count, as a fraction of ``num_clients`` (``max(1,
+        round(K * fraction))``), or ``num_clients`` when ``None``."""
+        if self.participation is None:
+            return self.num_clients
+        if isinstance(self.participation, float):
+            return max(1, int(round(self.num_clients * self.participation)))
+        return int(self.participation)
+
+    def __post_init__(self):
+        # Cross-field validation: fail loudly at config time instead of as an
+        # opaque shape/tracer error deep inside lax.map or the scatter.
+        if self.client_chunk is not None and self.client_chunk <= 0:
+            raise ValueError(
+                f"client_chunk must be a positive client count or None, got "
+                f"{self.client_chunk}")
+        if self.participation is None:
+            return
+        p = self.participation
+        ok_int = (isinstance(p, (int, np.integer))
+                  and not isinstance(p, bool)
+                  and 1 <= p <= self.num_clients)
+        ok_frac = (isinstance(p, float) and 0.0 < p <= 1.0)
+        if not (ok_int or ok_frac):
+            raise ValueError(
+                f"participation must be an int cohort size in [1, "
+                f"num_clients={self.num_clients}] or a float fraction in "
+                f"(0, 1], got {p!r}")
+        S = self.participation_size()
+        if self.client_chunk is not None and self.client_chunk > S:
+            raise ValueError(
+                f"client_chunk={self.client_chunk} exceeds the per-round "
+                f"cohort size {S} (participation={p!r}): LocalUpdate only ever "
+                f"sees the cohort, so the chunk can never fill — lower "
+                f"client_chunk to <= {S} or raise participation")
 
 
 # ---------------------------------------------------------------------------
@@ -334,10 +401,24 @@ def _local_update_all(model_cfg, fl_cfg, meta, w, m, v, t, data, keys):
 # ---------------------------------------------------------------------------
 
 
-def _round(state, data, key, model_cfg, fl_cfg, meta, policy):
-    """One global FL iteration. data: (K, n_win, L+T) materialized windows or
-    (K, T) raw series (``streaming_windows``) — see :func:`_local_update`."""
-    K = fl_cfg.num_clients
+def sample_cohort(key, num_clients: int, size: int):
+    """The per-round participant cohort: the first ``size`` entries of a
+    key-seeded permutation of ``arange(num_clients)``. Fixed-size (static
+    shapes inside the compiled drivers) and without replacement, so the
+    cohort gather never duplicates a client and comm accounting stays exact.
+    Every driver — loop/scan/while on-device, the host-store driver on host —
+    derives cohorts through this one function, so the same seed yields the
+    same cohort sequence everywhere."""
+    return jax.random.permutation(key, num_clients)[:size]
+
+
+def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
+    """One global FL iteration over the clients present in ``state`` — the
+    full fleet, or a gathered cohort under participation sampling (the client
+    count comes from the state's leading axis, NOT ``fl_cfg.num_clients``).
+    data: (K, n_win, L+T) materialized windows or (K, T) raw series
+    (``streaming_windows``) — see :func:`_local_update`."""
+    K = state["w_clients"].shape[0]
     k_sel, k_smask, k_fmask, k_upmask, k_local = jax.random.split(key, 5)
 
     selected = M.select_clients(k_sel, K, fl_cfg.select_ratio)  # (K,)
@@ -399,6 +480,40 @@ def _round(state, data, key, model_cfg, fl_cfg, meta, policy):
         "comm_total": comm_down + comm_up,
         "comm_bytes": (comm_down + comm_up) * (fl_cfg.comm_bits / 8.0),
     }
+    return new_state, metrics
+
+
+_CLIENT_AXIS_KEYS = ("w_clients", "adam_m", "adam_v", "adam_t")
+
+
+def _round(state, data, key, model_cfg, fl_cfg, meta, policy):
+    """One global FL iteration: the full fleet, or — with
+    ``FLConfig.participation`` — a per-round sampled cohort.
+
+    The sampled path splits a cohort key off the round key, gathers the
+    cohort's rows of every client-axis leaf (ONE ``(S,)`` gather out of the
+    ``(K, D)`` store, plus the matching data rows), runs :func:`_round_body`
+    on the cohort with the remaining key, and scatters the updated rows back.
+    Because the body receives the post-split key exactly as an unsampled
+    round would, a sampled round is BIT-IDENTICAL to a full round executed on
+    the gathered cohort (tests/test_participation.py relies on this to check
+    comm accounting covers sampled clients only). ``participation`` at
+    ``num_clients`` (or ``None``) skips the split entirely — the exact
+    historical code path, bitwise."""
+    K = fl_cfg.num_clients
+    S = fl_cfg.participation_size()
+    if S >= K:
+        return _round_body(state, data, key, model_cfg, fl_cfg, meta, policy)
+    k_cohort, k_round = jax.random.split(key)
+    cohort = sample_cohort(k_cohort, K, S)
+    sub = dict(state)
+    for name in _CLIENT_AXIS_KEYS:
+        sub[name] = state[name][cohort]
+    new_sub, metrics = _round_body(sub, data[cohort], k_round, model_cfg,
+                                   fl_cfg, meta, policy)
+    new_state = dict(new_sub)
+    for name in _CLIENT_AXIS_KEYS:
+        new_state[name] = state[name].at[cohort].set(new_sub[name])
     return new_state, metrics
 
 
@@ -588,7 +703,7 @@ def evaluate_rmse(model_cfg: forecast.ForecastConfig, w_vec, meta, data,
     return float(_rmse_device(model_cfg, w_vec, meta, data, client_chunk))
 
 
-_CLIENT_STATE_KEYS = frozenset({"w_clients", "adam_m", "adam_v", "adam_t"})
+_CLIENT_STATE_KEYS = frozenset(_CLIENT_AXIS_KEYS)
 
 
 def axis0_shardings(mesh_axis: str = "clients", mesh=None):
@@ -700,6 +815,25 @@ def run_fl(
       ``rounds_run``). With ``shard_clients=True`` the client-axis shardings
       are passed as ``in_shardings`` on the donated carry (one fresh jit per
       call on multi-device hosts; the single-device path uses the cached jit).
+    * ``driver="host"`` — the six-figure-``num_clients`` path: client params,
+      Adam moments and the raw series live in a HOST-resident
+      :class:`repro.core.fl.client_store.ClientStore` (numpy); each round
+      samples its cohort on host through the same :func:`sample_cohort` key
+      chain the compiled drivers use in-graph, transfers ONLY the cohort's
+      rows to the device, runs the jitted cohort round and scatters the
+      result back. Requires ``fl_cfg.streaming_windows`` (the store holds raw
+      ``(K, T)`` slices) and numpy ``train_data``/``test_data`` — pass
+      device arrays to the other drivers instead. Loop-driver stop semantics
+      (patience can fire mid-chunk).
+
+    ``FLConfig.participation`` applies to every driver: each round trains and
+    exchanges with a sampled size-S cohort only, comm counters accrue only
+    the cohort's gates, and the loop/scan/while drivers keep their donated-
+    carry / one-dispatch structure — the cohort gather/scatter compiles into
+    the round itself (the while driver's 22-host-transfer pin holds under
+    sampling). ``participation=num_clients`` (or ``None``) reproduces the
+    unsampled engine bitwise — same per-round states on the pinned CPU
+    toolchain, guarded in tests/test_participation.py.
 
     ``checkpoint_dir`` persists the final GLOBAL model (params + config) via
     :func:`repro.core.forecaster.save_forecaster`, restorable by
@@ -707,6 +841,15 @@ def run_fl(
     """
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    if driver == "host":
+        # host-resident client store: dispatched before any (K, D) device
+        # allocation happens — that residency is exactly what it avoids
+        from repro.core.fl.client_store import run_fl_host
+
+        return run_fl_host(model_cfg, fl_cfg, train_data, test_data, key,
+                           max_rounds=max_rounds, patience=patience,
+                           eval_every=eval_every, verbose=verbose,
+                           policy=policy, checkpoint_dir=checkpoint_dir)
     want = 2 if fl_cfg.streaming_windows else 3
     if train_data.ndim != want or test_data.ndim != want:
         raise ValueError(
@@ -835,14 +978,22 @@ def run_fl(
     else:
         final_rmse = evaluate_rmse(model_cfg, state["w_global"], meta,
                                    test_data, fl_cfg.client_chunk)
+    return _finalize_history(history, state, meta, model_cfg, fl_cfg,
+                             final_rmse, comm_total, checkpoint_dir)
+
+
+def _finalize_history(history, state, meta, model_cfg, fl_cfg, final_rmse,
+                      comm_total, checkpoint_dir):
+    """Shared run_fl tail (device drivers AND the host-store driver): attach
+    the summary fields and optionally checkpoint the trained GLOBAL model in
+    ``load_forecaster`` format — the deployable artifact the serving path
+    (launch/serve_forecast) restores."""
     history["final_rmse"] = final_rmse
     history["final_comm"] = comm_total
     history["rounds_run"] = len(history["round"])
     history["state"] = state
     history["meta"] = meta
     if checkpoint_dir is not None:
-        # persist the trained GLOBAL model in load_forecaster format — the
-        # deployable artifact the serving path (launch/serve_forecast) restores
         from repro.core.forecaster import Forecaster, save_forecaster
 
         params = tree_unflatten_from_vector(state["w_global"], meta)

@@ -42,6 +42,12 @@ class Policy(Protocol):
     ``global_tree``: server parameters (no client axis).
     ``client_tree``: client-stacked parameters, leaves ``(K, *leaf_shape)``.
     ``selected``: boolean ``(K,)`` from the engine's client selection.
+
+    ``K`` here is whatever rides the leading client axis — the full fleet,
+    or the gathered size-S cohort under ``FLConfig.participation`` (policies
+    always derive it from ``client_tree``'s shape, never from config, so
+    selection ratios and gates are COHORT-relative and non-participants
+    exchange nothing).
     ``keys``: for ``downlink_gates`` a ``(share_key, forward_key)`` pair; for
     ``uplink_gates`` a single key.
 

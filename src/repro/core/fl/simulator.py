@@ -12,7 +12,10 @@ This module keeps the seed repo's public names (``run_fl``,
 layout — materialized ``(K, n_win, L+T)`` windows or, with
 ``FLConfig.streaming_windows``, the raw ``(K, T)`` split slices from
 ``repro.data.windowing.client_series_datasets`` (windows are then gathered on
-device; bit-identical results at ~``(L+T)``x less data memory).
+device; bit-identical results at ~``(L+T)``x less data memory). With
+``FLConfig.participation`` each round trains a sampled size-S cohort only,
+and ``run_fl(driver="host")`` keeps the whole client fleet host-resident
+(``repro.core.fl.client_store.ClientStore``) for six-figure ``num_clients``.
 """
 from __future__ import annotations
 

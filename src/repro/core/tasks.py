@@ -172,7 +172,18 @@ class ExperimentSpec:
     sets ``FLConfig.streaming_windows`` so windows are gathered on device
     (bit-identical results, ~``(look_back + horizon)``x less training-data
     memory); it is spec-level because it decides the DATA layout — don't set
-    it through per-entry grid overrides."""
+    it through per-entry grid overrides.
+
+    ``participation`` (int cohort size or float fraction, ``None`` = full
+    participation) makes every round train and exchange with a sampled
+    size-S cohort only — see ``FLConfig.participation``. Spec-level because
+    it changes the round economics of the WHOLE grid; per-entry overrides can
+    still layer it. ``participation == num_clients`` (and ``None``)
+    reproduce the unsampled engine bitwise on the pinned CPU toolchain. For
+    six-figure fleets combine it with ``driver="host"``
+    (``repro.core.fl.client_store.ClientStore``: client state + raw series
+    host-resident, only each round's cohort on device; requires
+    ``streaming_windows``)."""
 
     task: ForecastTask
     model: Forecaster
@@ -187,12 +198,14 @@ class ExperimentSpec:
     driver: str = "scan"
     shard_clients: bool = False
     streaming_windows: bool = False
+    participation: Optional[float] = None
 
     def fl_config(self, policy: str, num_clients: int, overrides: dict) -> FLConfig:
         kw = dict(policy=policy, num_clients=num_clients,
                   select_ratio=self.select_ratio, local_steps=self.local_steps,
                   batch_size=self.batch_size,
-                  streaming_windows=self.streaming_windows)
+                  streaming_windows=self.streaming_windows,
+                  participation=self.participation)
         kw.update(overrides)
         return FLConfig(**kw)
 

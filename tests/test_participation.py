@@ -1,0 +1,299 @@
+"""Per-round participation sampling + host-resident client store
+(FLConfig.participation, engine.sample_cohort, client_store.ClientStore).
+
+The contracts this module guards:
+
+  * FLConfig cross-field validation fails FAST with clear errors
+    (client_chunk <= 0, participation outside (0, K], client_chunk larger
+    than the cohort) instead of shape errors deep inside ``lax.map``;
+  * ``participation=K`` (and ``None``) reproduce the unsampled engine
+    BITWISE — all 4 policies x all 3 compiled drivers (pinned CPU toolchain);
+  * a sampled round equals the full round executed on the gathered cohort,
+    bitwise, and non-participants' state is untouched — which implies the
+    comm counters accrue the sampled clients' gates ONLY (property-tested
+    across seeds for all 4 policies, hypothesis when available);
+  * same seed -> same cohort sequence in every driver: loop/scan/while and
+    the host-store driver agree on final states bitwise under sampling;
+  * the while driver's 22-host-transfer pin holds with sampling compiled
+    into the round;
+  * ``ExperimentSpec.participation`` reaches the FLConfig of every grid row.
+
+Bitwise assertions are scoped to the pinned CPU toolchain (jax 0.4.37),
+like the streaming-window guards in tests/test_streaming_windows.py.
+"""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import forecast as F
+from repro.core.fl import engine as E
+from repro.core.fl.client_store import ClientStore
+from repro.data.synthetic import nn5_synthetic
+from repro.data.windowing import client_series_datasets
+
+sys.path.insert(0, os.path.dirname(__file__))
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+POLICIES = ("online", "pso", "psgf", "psgf_topk")
+
+# dispatch-bound micro model: the round math is cheap, so the many
+# policy x driver combinations below stay fast
+MICRO = F.ForecastConfig(look_back=8, horizon=1, d_model=8, num_heads=2,
+                         d_ff=8, patch_len=4, stride=4, mixers=("id",))
+K = 6
+
+
+def _micro_data():
+    series = nn5_synthetic(seed=0, num_clients=K, num_days=30)
+    tr, _, te, _ = client_series_datasets(series, MICRO.look_back,
+                                          MICRO.horizon)
+    return tr, te
+
+
+TR_NP, TE_NP = _micro_data()
+TR, TE = jnp.asarray(TR_NP), jnp.asarray(TE_NP)
+
+
+def _cfg(policy="psgf", **kw):
+    kw.setdefault("streaming_windows", True)
+    return E.FLConfig(policy=policy, num_clients=K, local_steps=1,
+                      batch_size=2, **kw)
+
+
+def _states_equal(a, b, bitwise=True):
+    for k in a:
+        if bitwise:
+            np.testing.assert_array_equal(
+                np.asarray(a[k]), np.asarray(b[k]), err_msg=k)
+        else:
+            np.testing.assert_allclose(
+                np.asarray(a[k]), np.asarray(b[k]), rtol=1e-6, atol=1e-7,
+                err_msg=k)
+
+
+# ---- FLConfig cross-field validation --------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [0, -3])
+def test_client_chunk_must_be_positive(chunk):
+    with pytest.raises(ValueError, match="client_chunk"):
+        _cfg(client_chunk=chunk)
+
+
+@pytest.mark.parametrize("part", [0, -2, 7, 1.5, -0.5, True])
+def test_participation_out_of_range_rejected(part):
+    # ints must land in [1, num_clients], floats in (0, 1]; bools are a
+    # classic silent-int footgun and are rejected explicitly
+    with pytest.raises(ValueError, match="participation"):
+        _cfg(participation=part)
+
+
+def test_client_chunk_larger_than_cohort_rejected():
+    with pytest.raises(ValueError, match="cohort"):
+        _cfg(participation=2, client_chunk=4)
+
+
+def test_participation_size_resolution():
+    assert _cfg().participation_size() == K
+    assert _cfg(participation=K).participation_size() == K
+    assert _cfg(participation=2).participation_size() == 2
+    assert _cfg(participation=0.5).participation_size() == 3
+    assert _cfg(participation=1.0).participation_size() == K
+    # fractions round to the nearest client but never below one
+    assert _cfg(participation=0.01).participation_size() == 1
+
+
+def test_valid_edge_configs_construct():
+    _cfg(participation=1)
+    _cfg(participation=K)
+    _cfg(participation=2, client_chunk=2)
+
+
+# ---- participation=K == unsampled engine, bitwise, everywhere -------------
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_full_participation_bitwise_identical(policy):
+    """participation=num_clients (and None) must take the exact historical
+    code path: same per-round states, bitwise, for every compiled driver."""
+    key = jax.random.PRNGKey(3)
+    kw = dict(max_rounds=3, eval_every=3, patience=10)
+    for driver in ("loop", "scan", "while"):
+        h_none = E.run_fl(MICRO, _cfg(policy), TR, TE, key,
+                          driver=driver, **kw)
+        h_full = E.run_fl(MICRO, _cfg(policy, participation=K), TR, TE, key,
+                          driver=driver, **kw)
+        _states_equal(h_none["state"], h_full["state"])
+        assert h_none["final_comm"] == h_full["final_comm"]
+
+
+# ---- sampled round == full round on the gathered cohort -------------------
+
+
+def _check_sampled_round(policy, seed, S=3):
+    """One sampled round vs the unsampled engine run on the pre-gathered
+    cohort: states and comm counters must agree bitwise, and clients outside
+    the cohort must be untouched. This is the exact-accounting property —
+    comm bytes are the sum over sampled clients ONLY."""
+    fl_samp = _cfg(policy, participation=S)
+    fl_sub = dataclasses.replace(fl_samp, num_clients=S, participation=None)
+    state, meta = E.init_fl_state(MICRO, fl_samp, jax.random.PRNGKey(seed + 99))
+    key = jax.random.PRNGKey(seed)
+
+    new_state, metrics = E.fl_round(state, TR, key, MICRO, fl_samp, meta)
+
+    # replay the dispatcher's key chain and gather by hand
+    k_cohort, k_round = jax.random.split(key)
+    cohort = np.asarray(E.sample_cohort(k_cohort, K, S))
+    sub = dict(state)
+    for name in E._CLIENT_AXIS_KEYS:
+        sub[name] = state[name][cohort]
+    exp_sub, exp_metrics = E.fl_round(sub, TR[cohort], k_round, MICRO,
+                                      fl_sub, meta)
+
+    assert float(metrics["comm_total"]) == float(exp_metrics["comm_total"])
+    assert float(metrics["num_selected"]) == float(exp_metrics["num_selected"])
+    np.testing.assert_array_equal(np.asarray(new_state["w_global"]),
+                                  np.asarray(exp_sub["w_global"]))
+    others = np.setdiff1d(np.arange(K), cohort)
+    for name in E._CLIENT_AXIS_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(new_state[name][cohort]), np.asarray(exp_sub[name]),
+            err_msg=f"{name} (cohort rows)")
+        np.testing.assert_array_equal(
+            np.asarray(new_state[name][others]), np.asarray(state[name][others]),
+            err_msg=f"{name} (non-participants must be untouched)")
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sampled_round_matches_cohort_round(policy, seed):
+    _check_sampled_round(policy, seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(policy=st.sampled_from(POLICIES),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_sampled_comm_property(policy, seed):
+    """Property form of the exact-accounting guard (hypothesis when
+    installed): for any seed, per-round comm equals the sum over the sampled
+    cohort's gates only, for every policy."""
+    _check_sampled_round(policy, seed)
+
+
+# ---- cohort determinism: every driver sees the same cohort sequence -------
+
+
+def test_sample_cohort_deterministic_permutation_prefix():
+    key = jax.random.PRNGKey(11)
+    c1 = np.asarray(E.sample_cohort(key, 100, 7))
+    c2 = np.asarray(E.sample_cohort(key, 100, 7))
+    np.testing.assert_array_equal(c1, c2)
+    assert len(np.unique(c1)) == 7          # without replacement
+    assert c1.min() >= 0 and c1.max() < 100
+    full = np.asarray(E.sample_cohort(key, 100, 100))
+    np.testing.assert_array_equal(np.sort(full), np.arange(100))
+    np.testing.assert_array_equal(full[:7], c1)  # prefix property
+
+
+def test_drivers_agree_under_sampling():
+    """Same seed -> same cohort sequence -> same final states in every
+    driver (bitwise on the pinned CPU toolchain — scan/while share one
+    compiled round; loop and the host-store driver compile the gather
+    differently but the CPU backend preserves bit-identity, exactly like
+    the loop-vs-scan guard in test_engine.py)."""
+    fl_samp = _cfg("psgf", participation=3)
+    key = jax.random.PRNGKey(7)
+    kw = dict(max_rounds=4, eval_every=2, patience=50)
+    h_loop = E.run_fl(MICRO, fl_samp, TR, TE, key, driver="loop", **kw)
+    h_scan = E.run_fl(MICRO, fl_samp, TR, TE, key, driver="scan", **kw)
+    h_while = E.run_fl(MICRO, fl_samp, TR, TE, key, driver="while", **kw)
+    h_host = E.run_fl(MICRO, fl_samp, TR_NP, TE_NP, key, driver="host", **kw)
+    _states_equal(h_scan["state"], h_while["state"])
+    _states_equal(h_loop["state"], h_scan["state"])
+    _states_equal(h_host["state"], h_loop["state"])
+    assert h_loop["final_comm"] == h_scan["final_comm"] \
+        == h_while["final_comm"] == h_host["final_comm"]
+
+
+# ---- host-store driver ----------------------------------------------------
+
+
+def test_host_driver_requires_streaming_layout():
+    with pytest.raises(ValueError, match="streaming_windows"):
+        E.run_fl(MICRO, _cfg("psgf", streaming_windows=False,
+                             participation=3),
+                 TR_NP, TE_NP, jax.random.PRNGKey(0), max_rounds=1,
+                 driver="host")
+
+
+def test_host_driver_state_residency():
+    """The host driver's client-axis state must be host (numpy) resident;
+    only server-side leaves live on device."""
+    hist = E.run_fl(MICRO, _cfg("psgf", participation=2), TR_NP, TE_NP,
+                    jax.random.PRNGKey(5), max_rounds=2, eval_every=2,
+                    patience=10, driver="host")
+    store = hist["client_store"]
+    assert isinstance(store, ClientStore)
+    for name in E._CLIENT_AXIS_KEYS:
+        assert isinstance(hist["state"][name], np.ndarray), name
+    assert store.nbytes == store.state_nbytes + store.series_nbytes
+    assert store.state_nbytes > 0 and store.series_nbytes > 0
+    assert hist["rounds_run"] == 2
+
+
+def test_client_store_validates_inputs():
+    fl_cfg = _cfg("psgf", participation=2)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="streaming_windows"):
+        ClientStore(MICRO, _cfg("psgf", streaming_windows=False), TR_NP,
+                    TE_NP, key)
+    with pytest.raises(ValueError, match="ndim"):
+        ClientStore(MICRO, fl_cfg, TR_NP[:, :, None], TE_NP, key)
+    with pytest.raises(ValueError, match="num_clients"):
+        ClientStore(MICRO, fl_cfg, TR_NP[:-1], TE_NP, key)
+
+
+# ---- while-driver one-dispatch pin under sampling -------------------------
+
+
+def test_while_driver_transfer_pin_holds_under_sampling():
+    """Cohort gather/scatter compiles INTO the round: the 22-host-transfer
+    pin from test_engine.py must hold unchanged with participation set."""
+    from benchmarks.fl_rounds import _data, count_transfers
+
+    tr, te = _data(4, 8, 1, streaming=True)
+    fl_cfg = E.FLConfig(policy="psgf", num_clients=4, local_steps=1,
+                        batch_size=2, streaming_windows=True, participation=2)
+    run = lambda: E.run_fl(MICRO, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                           max_rounds=50, patience=51, eval_every=5,
+                           driver="while")
+    run()  # warmup/compile
+    _, transfers = count_transfers(run)
+    assert transfers["host_to_device"] <= 22, transfers
+
+
+# ---- ExperimentSpec wiring ------------------------------------------------
+
+
+def test_experiment_spec_participation_wiring():
+    from repro.core.forecaster import get_forecaster
+    from repro.core.tasks import ExperimentSpec, get_task
+
+    task = get_task("nn5", seed=0, num_clients=K, num_days=30, look_back=8,
+                    horizon=1)
+    model = get_forecaster("idformer", look_back=8, horizon=1, d_model=8,
+                           num_heads=2, d_ff=8, patch_len=4, stride=4,
+                           mixers=("id",))
+    spec = ExperimentSpec(task=task, model=model, participation=0.5,
+                          streaming_windows=True)
+    cfg = spec.fl_config("psgf", K, {})
+    assert cfg.participation == 0.5
+    assert cfg.participation_size() == 3
+    # per-entry grid overrides still layer on top of the spec-level knob
+    assert spec.fl_config("psgf", K, {"participation": 2}).participation == 2
