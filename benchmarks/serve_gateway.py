@@ -1,0 +1,398 @@
+"""Gateway load benchmark: a ~1M-station request mix against the LIVE HTTP
+front door (repro/launch/gateway.py), closed loop over localhost.
+
+The fleet the paper envisions is a million charging stations querying a
+central forecasting service. This benchmark simulates exactly that request
+mix and measures what the serving stack sustains END TO END:
+
+  * STATION UNIVERSE — the quick 2-cluster manifest's restored models are
+    re-tabled behind a ``--stations`` (default 1,000,000)-entry routing
+    table, so every request routes through a genuinely million-station
+    manifest; station POPULARITY is Zipf-skewed (``--zipf-a``), the classic
+    shape of real fleet traffic (few hot depots, a long tail), shuffled so
+    hot stations land in both clusters; channel counts are mixed (80% 1- and
+    20% 3-channel) so the per-(cluster, shape) coalescing really runs.
+  * CLOSED LOOP — ``--clients`` keep-alive HTTP connections each issue
+    request -> wait -> next for ``--secs``; we record sustained QPS, p50/p95/
+    p99 latency, shed rate, HTTP code mix, and reconcile per-cluster QPS and
+    batch fill from the gateway's OWN ``/metricz`` exposition (the numbers
+    ops would see).
+  * A/B #1 (``gateway_vs_inprocess``) — the same mix, same closed-loop
+    concurrency, straight into ``ForecastServer.submit``/``result`` with no
+    HTTP in between. The acceptance bar: gateway QPS within 2x of the
+    in-process routed queue (asserted).
+  * A/B #2 (``metrics_overhead``) — routed-queue throughput with the
+    metrics registry recording vs ``metrics=False``, same traffic: the
+    before/after guard that hot-path histograms stay ~free (asserted loosely
+    at >= 0.75x to survive shared-CI timing noise).
+  * OVERLOAD — a deliberately tiny admission queue under full client
+    pressure: shed rate jumps, every shed is a clean 503 + Retry-After, and
+    the model never sees the shed requests.
+
+  PYTHONPATH=src python -m benchmarks.serve_gateway [--quick]
+      [--stations 1000000] [--clients 8] [--secs 10]
+
+Results -> experiments/serve_gateway/results.json (committed).
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.launch.gateway import ForecastGateway, request_json
+from repro.launch.metrics import parse_exposition, sum_samples
+from repro.launch.serve_forecast import ForecastServer, serve_requests
+
+from benchmarks.common import record_env, save_json
+from benchmarks.serve_forecast import train_routed_checkpoints
+
+TOKEN = "bench-token"
+CHANNEL_MIX = ((1, 0.8), (3, 0.2))   # (channels, probability)
+
+
+# ---- million-station universe ----------------------------------------------
+
+
+def build_big_server(root: str, stations: int, metrics: bool = True,
+                     max_batch: int = 64, max_wait_ms: float = 2.0
+                     ) -> ForecastServer:
+    """The quick manifest's restored cluster models behind a ``stations``-
+    entry routing table (station i -> cluster i % n): a genuinely
+    million-station routed server without training a million stations."""
+    base = ForecastServer.from_manifest(root, max_batch=max_batch,
+                                        metrics=False)
+    labels = sorted(base.engines)
+    table = np.asarray(labels, dtype=np.int64)[
+        np.arange(stations) % len(labels)]
+    return ForecastServer(
+        models={c: (e.forecaster, e.params) for c, e in base.engines.items()},
+        station_cluster=table, max_batch=max_batch, max_wait_ms=max_wait_ms,
+        metrics=metrics)
+
+
+def zipf_station_stream(n: int, stations: int, a: float, seed: int
+                        ) -> np.ndarray:
+    """``n`` station ids, popularity Zipf(a) over the ``stations`` universe,
+    identity-shuffled so rank-1 isn't always station 0 (hot stations spread
+    across clusters)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, stations + 1, dtype=np.float64)
+    p = ranks ** -a
+    p /= p.sum()
+    draws = rng.choice(stations, size=n, p=p)
+    perm = rng.permutation(stations)
+    return perm[draws]
+
+
+def request_bodies(station_stream: np.ndarray, look_back: int, seed: int):
+    """Pre-serialized JSON bodies (bytes) for the closed loop: the client
+    threads must spend their time on the WIRE, not in json.dumps. Channel
+    counts follow CHANNEL_MIX."""
+    rng = np.random.default_rng(seed)
+    xs = {m: json.dumps(
+        (0.1 * rng.standard_normal((m, look_back))).round(4).tolist())
+        for m, _ in CHANNEL_MIX}
+    ms = rng.choice([m for m, _ in CHANNEL_MIX], size=len(station_stream),
+                    p=[p for _, p in CHANNEL_MIX])
+    return [(f'{{"x": {xs[int(m)]}, "station": {int(s)}}}').encode()
+            for m, s in zip(ms, station_stream)], ms
+
+
+# ---- closed-loop drivers -----------------------------------------------------
+
+
+def closed_loop_gateway(host: str, port: int, bodies, secs: float,
+                        clients: int):
+    """``clients`` keep-alive connections, each request->wait->next until the
+    clock runs out; returns per-request (latency, status) tallies."""
+    headers = {"Authorization": f"Bearer {TOKEN}",
+               "Content-Type": "application/json"}
+    lat: list = [[] for _ in range(clients)]
+    codes: list = [{} for _ in range(clients)]
+    stop_at = time.perf_counter() + secs
+
+    def client(i):
+        conn = http.client.HTTPConnection(host, port, timeout=60)
+        my_lat, my_codes = lat[i], codes[i]
+        j = i  # interleave the shared body stream across clients
+        n = len(bodies)
+        try:
+            while time.perf_counter() < stop_at:
+                body = bodies[j % n]
+                j += clients
+                t0 = time.perf_counter()
+                conn.request("POST", "/v1/forecast", body=body,
+                             headers=headers)
+                resp = conn.getresponse()
+                resp.read()
+                my_lat.append(time.perf_counter() - t0)
+                my_codes[resp.status] = my_codes.get(resp.status, 0) + 1
+        finally:
+            conn.close()
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    all_lat = np.asarray([l for ls in lat for l in ls])
+    all_codes: dict = {}
+    for c in codes:
+        for k, v in c.items():
+            all_codes[k] = all_codes.get(k, 0) + v
+    return all_lat, all_codes, wall
+
+
+def closed_loop_inprocess(server: ForecastServer, station_stream, ms,
+                          secs: float, clients: int, look_back: int):
+    """The no-HTTP baseline: same closed-loop structure (submit -> result ->
+    next per worker), same station mix, straight into the routed queue."""
+    rng = np.random.default_rng(7)
+    xs = {m: (0.1 * rng.standard_normal((m, look_back))).astype(np.float32)
+          for m, _ in CHANNEL_MIX}
+    lat: list = [[] for _ in range(clients)]
+    stop_at = time.perf_counter() + secs
+
+    def worker(i):
+        my_lat = lat[i]
+        j = i
+        n = len(station_stream)
+        while time.perf_counter() < stop_at:
+            s = int(station_stream[j % n])
+            x = xs[int(ms[j % n])]
+            j += clients
+            t0 = time.perf_counter()
+            fut = server.submit(x, station=s)
+            fut.result(timeout=60)
+            my_lat.append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return np.asarray([l for ls in lat for l in ls]), wall
+
+
+def latency_row(lat: np.ndarray, wall: float, codes=None) -> dict:
+    row = {
+        "requests": int(lat.size),
+        "seconds": wall,
+        "qps": lat.size / wall,
+        "latency_ms": {
+            "p50": float(np.percentile(lat, 50) * 1e3),
+            "p95": float(np.percentile(lat, 95) * 1e3),
+            "p99": float(np.percentile(lat, 99) * 1e3),
+            "mean": float(lat.mean() * 1e3),
+        } if lat.size else None,
+    }
+    if codes is not None:
+        total = sum(codes.values())
+        shed = codes.get(503, 0) + codes.get(429, 0)
+        row["http_codes"] = {str(k): v for k, v in sorted(codes.items())}
+        row["shed_rate"] = shed / total if total else 0.0
+    return row
+
+
+def cluster_rows_from_metricz(host, port, secs: float) -> dict:
+    """Per-cluster QPS and batch fill reconciled from the gateway's OWN
+    /metricz exposition — the benchmark reads the same numbers ops would."""
+    status, _, text = request_json(host, port, "GET", "/metricz")
+    assert status == 200
+    s = parse_exposition(text)
+    out = {}
+    clusters = sorted({dict(labels).get("cluster")
+                       for (name, labels) in s
+                       if name == "forecast_requests_total"})
+    for c in clusters:
+        fill_sum = sum_samples(s, "forecast_batch_fill_sum", cluster=c)
+        fill_cnt = sum_samples(s, "forecast_batch_fill_count", cluster=c)
+        out[c] = {
+            "requests": sum_samples(s, "forecast_requests_total", cluster=c),
+            "qps": sum_samples(s, "forecast_requests_total", cluster=c) / secs,
+            "batches": sum_samples(s, "forecast_batches_total", cluster=c),
+            "padded_slots": sum_samples(s, "forecast_padded_slots_total",
+                                        cluster=c),
+            "batch_fill": fill_sum / fill_cnt if fill_cnt else None,
+        }
+    return out
+
+
+# ---- benchmark sections ------------------------------------------------------
+
+
+def bench_gateway(root: str, stations: int, clients: int, secs: float,
+                  zipf_a: float, n_bodies: int) -> dict:
+    server = build_big_server(root, stations)
+    look_back = server.forecaster.cfg.look_back
+    stream = zipf_station_stream(n_bodies, stations, zipf_a, seed=0)
+    bodies, ms = request_bodies(stream, look_back, seed=1)
+    for m, _ in CHANNEL_MIX:
+        server.warmup(channels=m)
+    gw = ForecastGateway(server, auth_token=TOKEN, rate_limit=2000.0,
+                         rate_burst=2000.0, max_pending=max(64, 8 * clients),
+                         deadline_s=30.0)
+    host, port = gw.start()
+    try:
+        # tiny priming pass so jit/TCP setup lands off the timed window
+        for b in bodies[:4]:
+            st, _, _ = request_json(host, port, "POST", "/v1/forecast",
+                                    json.loads(b), token=TOKEN)
+            assert st == 200
+        lat, codes, wall = closed_loop_gateway(host, port, bodies, secs,
+                                               clients)
+        row = latency_row(lat, wall, codes)
+        row.update({
+            "stations": stations, "clients": clients, "zipf_a": zipf_a,
+            "channel_mix": {str(m): p for m, p in CHANNEL_MIX},
+            "per_cluster": cluster_rows_from_metricz(host, port, wall),
+        })
+    finally:
+        gw.stop(close_server=False)
+    row["drained_clean"] = bool(gw.drained)
+    server.close()
+    return row
+
+
+def bench_inprocess(root: str, stations: int, clients: int, secs: float,
+                    zipf_a: float, n_bodies: int) -> dict:
+    server = build_big_server(root, stations)
+    look_back = server.forecaster.cfg.look_back
+    stream = zipf_station_stream(n_bodies, stations, zipf_a, seed=0)
+    _, ms = request_bodies(stream, look_back, seed=1)  # same channel mix
+    for m, _ in CHANNEL_MIX:
+        server.warmup(channels=m)
+    server.start()
+    lat, wall = closed_loop_inprocess(server, stream, ms, secs, clients,
+                                      look_back)
+    row = latency_row(lat, wall)
+    server.close()
+    return row
+
+
+def bench_metrics_overhead(root: str, stations: int, requests: int) -> dict:
+    """Before/after guard: the hot-path histogram recordings must not
+    measurably dent routed-queue throughput."""
+    out = {}
+    for key, metrics in (("metrics_on", True), ("metrics_off", False)):
+        server = build_big_server(root, stations, metrics=metrics)
+        server.warmup(channels=3)  # compile excluded from the timed window
+        sts = list(range(0, stations, max(1, stations // 64)))[:64]
+        best = None
+        for _ in range(3):  # best-of-3: shield the ratio from load spikes
+            rep = serve_requests(server, requests=requests, channels=3,
+                                 stations=sts)
+            if best is None or rep["forecasts_per_sec"] > best["forecasts_per_sec"]:
+                best = rep
+        out[key] = {"forecasts_per_sec": best["forecasts_per_sec"],
+                    "batches": best["batches"]}
+        server.close()
+    out["on_vs_off"] = (out["metrics_on"]["forecasts_per_sec"]
+                        / out["metrics_off"]["forecasts_per_sec"])
+    return out
+
+
+def bench_overload(root: str, stations: int, clients: int, secs: float,
+                   n_bodies: int) -> dict:
+    """Deliberate overload: admission queue of 2 under full pressure — the
+    shed path must be the common case, clean 503s, bounded depth."""
+    server = build_big_server(root, stations, max_wait_ms=20.0)
+    look_back = server.forecaster.cfg.look_back
+    stream = zipf_station_stream(n_bodies, stations, 1.1, seed=3)
+    bodies, _ = request_bodies(stream, look_back, seed=4)
+    for m, _ in CHANNEL_MIX:
+        server.warmup(channels=m)
+    gw = ForecastGateway(server, auth_token=TOKEN, max_pending=2,
+                         deadline_s=5.0, retry_after_s=0.5)
+    host, port = gw.start()
+    try:
+        lat, codes, wall = closed_loop_gateway(host, port, bodies, secs,
+                                               clients)
+        row = latency_row(lat, wall, codes)
+        _, _, text = request_json(host, port, "GET", "/metricz")
+        s = parse_exposition(text)
+        row["shed_queue_full"] = sum_samples(s, "gateway_shed_total",
+                                             reason="queue_full")
+        row["max_pending"] = 2
+    finally:
+        gw.stop(close_server=False)
+    server.close()
+    return row
+
+
+def run(quick: bool = False, stations: int = 1_000_000, clients: int = 8,
+        secs: float = 10.0, zipf_a: float = 1.1):
+    if quick:
+        stations = min(stations, 100_000)
+        secs = 2.0
+    n_bodies = 4096 if quick else 16384
+    results = {"env": record_env(stations=stations, clients=clients,
+                                 zipf_a=zipf_a, closed_loop_secs=secs)}
+    with tempfile.TemporaryDirectory() as d:
+        task, _ = train_routed_checkpoints(d, quick=True)
+        results["gateway"] = bench_gateway(d, stations, clients, secs,
+                                           zipf_a, n_bodies)
+        g = results["gateway"]
+        print(f"serve_gateway,gateway,{g['qps']:.0f} qps,"
+              f"p50={g['latency_ms']['p50']:.2f}ms,"
+              f"p99={g['latency_ms']['p99']:.2f}ms,"
+              f"shed={g['shed_rate']:.3f}", flush=True)
+
+        results["inprocess_queue"] = bench_inprocess(
+            d, stations, clients, secs, zipf_a, n_bodies)
+        q = results["inprocess_queue"]
+        ratio = g["qps"] / q["qps"]
+        results["gateway_vs_inprocess"] = ratio
+        print(f"serve_gateway,inprocess,{q['qps']:.0f} qps,"
+              f"gateway_vs_inprocess=x{ratio:.2f}", flush=True)
+        assert ratio >= 0.5, (
+            f"gateway sustains only {ratio:.2f}x of the in-process routed "
+            f"queue at the same mix (acceptance: within 2x)")
+
+        results["metrics_overhead"] = bench_metrics_overhead(
+            d, stations, requests=512 if quick else 2048)
+        mo = results["metrics_overhead"]
+        print(f"serve_gateway,metrics_overhead,"
+              f"on={mo['metrics_on']['forecasts_per_sec']:.0f},"
+              f"off={mo['metrics_off']['forecasts_per_sec']:.0f},"
+              f"x{mo['on_vs_off']:.3f}", flush=True)
+        assert mo["on_vs_off"] >= 0.75, (
+            f"metrics recording costs {1 - mo['on_vs_off']:.0%} of "
+            "routed-queue throughput — hot path regressed")
+
+        results["overload"] = bench_overload(
+            d, stations, clients=max(clients, 8),
+            secs=min(secs, 3.0), n_bodies=n_bodies)
+        o = results["overload"]
+        print(f"serve_gateway,overload,shed_rate={o['shed_rate']:.3f},"
+              f"codes={o['http_codes']}", flush=True)
+        assert o["shed_queue_full"] > 0, "overload never shed — not bounded?"
+
+    path = save_json("serve_gateway", "results", results)
+    print(f"serve_gateway,saved,{path}", flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 100k stations, 2s closed loops")
+    ap.add_argument("--stations", type=int, default=1_000_000)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--secs", type=float, default=10.0)
+    ap.add_argument("--zipf-a", type=float, default=1.1)
+    args = ap.parse_args()
+    run(quick=args.quick, stations=args.stations, clients=args.clients,
+        secs=args.secs, zipf_a=args.zipf_a)

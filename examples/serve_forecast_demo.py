@@ -12,15 +12,21 @@ server -> streaming online evaluation, end to end through the one API surface:
   4. queued requests route by station across the cluster models and coalesce
      per (cluster, shape) micro-batch;
   5. ``stream_evaluate`` replays the held-out windows through the queue in
-     arrival order and reports per-cluster ONLINE RMSE.
+     arrival order and reports per-cluster ONLINE RMSE;
+  6. with ``--gateway``, the same server goes behind the HTTP front door
+     (``ForecastGateway``) and one authed RAW-UNIT forecast plus healthz and
+     metricz round-trip over localhost.
 
   PYTHONPATH=src python examples/serve_forecast_demo.py \
-      [--clusters 2] [--quick] [--comm-bits 16] [--requests 64]
+      [--clusters 2] [--quick] [--comm-bits 16] [--requests 64] [--gateway]
 """
 import argparse
 import tempfile
 
+import numpy as np
+
 from repro.core.tasks import ExperimentSpec, get_task, run_experiment, task_forecaster
+from repro.launch.gateway import ForecastGateway, request_json
 from repro.launch.serve_forecast import ForecastServer, serve_requests, stream_evaluate
 
 
@@ -35,6 +41,8 @@ def main():
                     help="CI smoke: fewer rounds/requests/replay windows")
     ap.add_argument("--ckpt-dir", default=None,
                     help="keep checkpoints here (default: temp dir)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="also serve one authed raw-unit request over HTTP")
     args = ap.parse_args()
     rounds = 4 if args.quick else args.rounds
     requests = 32 if args.quick else args.requests
@@ -61,7 +69,8 @@ def main():
 
     # ONE server restores every cluster's model and routes by station
     server = ForecastServer.from_manifest(ckpt_root, comm_bits=args.comm_bits,
-                                          max_batch=16, max_wait_ms=1.0)
+                                          max_batch=16, max_wait_ms=1.0,
+                                          denormalize=args.gateway)
     print(f"3) restored {len(server.engines)} cluster models "
           f"({server.forecaster.name}, {server.forecaster.num_params():,} "
           f"params each, comm_bits={args.comm_bits}) from {ckpt_root}")
@@ -83,6 +92,26 @@ def main():
           f"through the queue in {ev['seconds']:.2f}s -> online RMSE "
           f"{ev['overall_rmse']:.4f} [{per}] "
           f"({ev['unroutable']} unroutable)")
+
+    if args.gateway:
+        token = "demo-token"
+        with ForecastGateway(server, auth_token=token) as gw:
+            host, port = gw.address
+            sid = int(server.routable_stations()[0])
+            L = server.forecaster.cfg.look_back
+            x_raw = np.asarray(series, np.float32)[sid, -L:].reshape(1, L)
+            code, _, body = request_json(
+                host, port, "POST", "/v1/forecast",
+                {"x": x_raw.tolist(), "station": sid, "raw": True},
+                token=token)
+            assert code == 200 and body["raw"], (code, body)
+            hcode, _, health = request_json(host, port, "GET", "/healthz")
+            mcode, _, _ = request_json(host, port, "GET", "/metricz")
+            y = np.asarray(body["y"], np.float32)
+            print(f"6) gateway on http://{host}:{port}: authed raw-unit "
+                  f"forecast for station {sid} (cluster {body['cluster']}) "
+                  f"-> HTTP {code}, y[0]={y.ravel()[0]:.3f} (raw units); "
+                  f"healthz {hcode} ({health['status']}), metricz {mcode}")
 
 
 if __name__ == "__main__":

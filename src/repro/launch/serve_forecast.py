@@ -29,7 +29,21 @@ module turns those checkpoints into a batched, routed inference endpoint:
     the inference side;
   * :func:`stream_evaluate` is the continuous-evaluation harness: it replays
     a held-out day of ``ForecastTask`` windows through the queue in arrival
-    order and tracks per-cluster ONLINE RMSE.
+    order and tracks per-cluster ONLINE RMSE (a per-request timeout skips and
+    counts stuck futures instead of stalling the whole replay);
+  * every server carries a ``repro.launch.metrics.MetricsRegistry``
+    (``metrics=False`` opts out): the worker loop records submit->result
+    latency histograms, per-(cluster, shape) batch fill and padded-slot
+    waste, per-cluster request/series counters and reject/error tallies —
+    dumped by :meth:`ForecastServer.metrics_text` and served over HTTP at
+    ``GET /metricz`` by ``repro.launch.gateway.ForecastGateway``, the
+    production front door (auth, rate limiting, load shedding) for this
+    server;
+  * :meth:`ForecastServer.close` is the TERMINAL shutdown: it stops the
+    worker, fails every still-pending future with ``RuntimeError``, and
+    fails anything submitted afterwards — waiters never hang on a dead
+    server (``stop()`` remains the pausable variant: the worker drains its
+    current window and can be ``start()``-ed again).
 
 Routing manifest format (written by ``repro.core.tasks.run_experiment`` via
 ``write_routing_manifest`` at ``<checkpoint_dir>/routing.json``)::
@@ -76,7 +90,7 @@ import os
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from functools import lru_cache
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -85,9 +99,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.forecaster import Forecaster, load_forecaster
+from repro.launch.metrics import DEFAULT_LATENCY_BUCKETS, MetricsRegistry
 
 _STOP = object()
 _NO_DEFAULT = object()  # multi-cluster servers have no default route
+
+
+def _safe_set(fut: Future, result=None, exc: Optional[BaseException] = None):
+    """Resolve a waiter that may ALREADY be done: a gateway deadline (or any
+    caller) can cancel a queued future, and set_result on it would raise
+    InvalidStateError out of the worker loop — killing the thread and
+    hanging every later waiter. A cancelled/raced future just discards the
+    late result."""
+    try:
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(result)
+    except InvalidStateError:
+        pass
 
 
 def batch_buckets(max_batch: int) -> Tuple[int, ...]:
@@ -181,7 +211,8 @@ class ForecastServer:
                  models: Optional[Dict] = None,
                  station_cluster: Optional[Sequence[int]] = None,
                  station_norm: Optional[Tuple] = None,
-                 shard_batch: bool = False):
+                 shard_batch: bool = False,
+                 metrics: bool = True):
         if models is None:
             if forecaster is None or params is None:
                 raise ValueError("pass (forecaster, params) or models=")
@@ -214,6 +245,60 @@ class ForecastServer:
                               for c in self.engines}
         self._queue: "queue.Queue" = queue.Queue()
         self._worker_thread: Optional[threading.Thread] = None
+        self._closed = False
+        self._lifecycle = threading.Lock()  # guards _closed vs enqueue
+        self.metrics: Optional[MetricsRegistry] = None
+        if metrics:
+            self._init_metrics()
+
+    def _init_metrics(self):
+        """Declare the serving metric families (catalogued in
+        docs/serving.md). Hot-path recordings go through the cached label
+        children, so steady-state cost is a dict hit + a locked float add."""
+        m = self.metrics = MetricsRegistry()
+        self._m_requests = m.counter(
+            "forecast_requests_total",
+            "submit() requests accepted into the micro-batch queue",
+            ("cluster",))
+        self._m_rejected = m.counter(
+            "forecast_rejected_total",
+            "submit() requests failed before enqueue (never dispatched)",
+            ("kind",))
+        self._m_latency = m.histogram(
+            "forecast_latency_seconds",
+            "submit() -> resolved-future latency",
+            ("cluster",), buckets=DEFAULT_LATENCY_BUCKETS)
+        self._m_batches = m.counter(
+            "forecast_batches_total",
+            "micro-batches dispatched to a cluster engine",
+            ("cluster", "shape"))
+        self._m_padded = m.counter(
+            "forecast_padded_slots_total",
+            "bucket slots padded (wasted) in dispatched micro-batches",
+            ("cluster", "shape"))
+        self._m_fill = m.histogram(
+            "forecast_batch_fill",
+            "live-row fraction of each dispatched bucket",
+            ("cluster", "shape"),
+            buckets=(0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0))
+        self._m_series = m.counter(
+            "forecast_series_served_total",
+            "series (station-channels) forecast per cluster",
+            ("cluster",))
+        self._m_errors = m.counter(
+            "forecast_dispatch_errors_total",
+            "micro-batch dispatches that failed their whole group",
+            ("cluster",))
+        m.gauge("forecast_queue_depth",
+                "requests waiting in the micro-batch queue",
+                fn=self._queue.qsize)
+        m.gauge("forecast_clusters", "restored cluster engines",
+                fn=lambda: float(len(self.engines)))
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the server registry (the body the
+        gateway serves at GET /metricz); empty with ``metrics=False``."""
+        return "" if self.metrics is None else self.metrics.expose()
 
     # --- restore ----------------------------------------------------------
     @classmethod
@@ -351,6 +436,12 @@ class ForecastServer:
         self.stats["padded_slots"] += bucket - b
         self.stats["series_served"] += b * M
         self.cluster_stats[cluster]["series_served"] += b * M
+        if self.metrics is not None:
+            lbl = (str(cluster), f"{M}x{L}")
+            self._m_batches.labels(*lbl).inc()
+            self._m_padded.labels(*lbl).inc(bucket - b)
+            self._m_fill.labels(*lbl).observe(b / bucket)
+            self._m_series.labels(str(cluster)).inc(b * M)
         return result
 
     def predict(self, x, station=None, cluster=None) -> np.ndarray:
@@ -390,6 +481,8 @@ class ForecastServer:
     # --- micro-batching request queue -------------------------------------
     def start(self):
         """Spawn the coalescing worker; ``submit`` becomes non-blocking."""
+        if self._closed:
+            raise RuntimeError("ForecastServer is closed")
         if self._worker_thread is not None:
             return
         self._worker_thread = threading.Thread(target=self._worker, daemon=True)
@@ -423,44 +516,98 @@ class ForecastServer:
             if norm is not None:
                 x = (x - norm[0]) / norm[1]
         except Exception as exc:  # incl. ragged/non-numeric asarray failures
+            if self.metrics is not None:
+                kind = ("unroutable" if isinstance(exc, KeyError)
+                        else "malformed")
+                self._m_rejected.labels(kind).inc()
             fut.set_exception(exc)
             return fut
-        self.stats["requests"] += 1
-        self.cluster_stats[cluster]["requests"] += 1
-        self._queue.put((cluster, x, fut))
+        with self._lifecycle:
+            # closed-check and enqueue are ONE atomic step: a request can
+            # never slip into the queue between close() draining it and the
+            # flag flipping — submit-after-close fails the future promptly
+            # instead of leaving a waiter hanging on a dead worker
+            if self._closed:
+                fut.set_exception(RuntimeError(
+                    "ForecastServer is closed; request was not enqueued"))
+                return fut
+            self.stats["requests"] += 1
+            self.cluster_stats[cluster]["requests"] += 1
+            if self.metrics is not None:
+                self._m_requests.labels(str(cluster)).inc()
+                lat = self._m_latency.labels(str(cluster))
+                t0 = time.perf_counter()
+                fut.add_done_callback(
+                    lambda f, lat=lat, t0=t0: lat.observe(
+                        time.perf_counter() - t0))
+            self._queue.put((cluster, x, fut))
         if norm is None:
             return fut
         mu, sd = norm
         outer: Future = Future()
 
         def _rescale(f, outer=outer, mu=mu, sd=sd):
+            if f.cancelled():
+                outer.cancel()
+                return
             exc = f.exception()
             if exc is not None:
-                outer.set_exception(exc)
+                _safe_set(outer, exc=exc)
             else:
-                outer.set_result(f.result() * sd + mu)
+                _safe_set(outer, f.result() * sd + mu)
 
         fut.add_done_callback(_rescale)
         return outer
 
     def stop(self):
+        """Pause the worker: it drains its current coalescing window, then
+        exits; ``start()`` resumes. Requests enqueued while stopped wait in
+        the queue (use :meth:`close` to fail them instead)."""
         if self._worker_thread is None:
             return
         self._queue.put(_STOP)
         self._worker_thread.join()
         self._worker_thread = None
 
+    def close(self):
+        """TERMINAL shutdown: stop the worker and fail EVERY still-pending
+        future with ``RuntimeError`` — a blocked ``.result(timeout=...)``
+        raises promptly instead of hanging forever on a server that will
+        never serve it. Requests submitted after close() fail their future
+        the same way. Idempotent; ``predict`` (the synchronous direct path)
+        keeps working on the restored engines."""
+        with self._lifecycle:
+            if self._closed:
+                return
+            self._closed = True
+        self.stop()
+        # the worker is gone and _closed bars new enqueues, so whatever is
+        # left in the queue would hang its waiters forever — fail them all
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is _STOP:
+                continue
+            _safe_set(item[2], exc=RuntimeError(
+                "ForecastServer closed before this request was served"))
+
     def _run_group(self, cluster, items):
         """Serve one coalesced (cluster, shape) group; a failure propagates
-        to THIS group's waiters only."""
+        to THIS group's waiters only. Futures are resolved through
+        ``_safe_set`` so a waiter that cancelled (gateway deadline) can't
+        blow up the worker thread."""
         try:
             ys = self.predict(np.stack([x for _, x, _ in items]),
                               cluster=cluster)
             for (_, _, fut), y in zip(items, ys):
-                fut.set_result(y)
+                _safe_set(fut, y)
         except Exception as exc:
+            if self.metrics is not None:
+                self._m_errors.labels(str(cluster)).inc()
             for _, _, fut in items:
-                fut.set_exception(exc)
+                _safe_set(fut, exc=exc)
 
     def _worker(self):
         while True:
@@ -563,7 +710,8 @@ def serve_requests(server: ForecastServer, requests: int, channels: int,
 
 def stream_evaluate(server: ForecastServer, task, series=None,
                     max_windows: Optional[int] = None,
-                    timeout: float = 120.0) -> dict:
+                    timeout: Optional[float] = 120.0,
+                    include_metrics: bool = False) -> dict:
     """Streaming/continuous evaluation: replay the task's HELD-OUT test
     windows through the micro-batching queue in arrival order (every
     station's window w before any station's window w+1 — the request pattern
@@ -577,6 +725,13 @@ def stream_evaluate(server: ForecastServer, task, series=None,
     checkpoint are counted in ``unroutable`` and excluded from the RMSE;
     any OTHER failure (e.g. a task/checkpoint look-back mismatch) raises.
 
+    ``timeout`` is PER REQUEST: a future that hasn't resolved in time is
+    skipped and tallied in ``timed_out`` instead of stalling the whole
+    replay on one stuck request (``timeout=None`` waits forever — the old
+    behavior). ``include_metrics=True`` attaches the server's Prometheus
+    exposition after the replay as ``metrics_text`` — the same body the
+    gateway serves at ``GET /metricz``.
+
     The replay windows come from ``client_data`` already NORMALIZED, so the
     evaluation always runs in normalized units: on a raw-serving server
     (``from_manifest(denormalize=True)``) routable requests are submitted by
@@ -585,9 +740,10 @@ def stream_evaluate(server: ForecastServer, task, series=None,
     not apply. Same RMSE as the plain server, guarded in
     tests/test_routed_serving.py.
 
-    Returns ``{"overall_rmse", "windows", "unroutable", "seconds",
-    "per_cluster": {label: {"rmse", "windows"}}}``.
+    Returns ``{"overall_rmse", "windows", "unroutable", "timed_out",
+    "seconds", "per_cluster": {label: {"rmse", "windows"}}}``.
     """
+    from concurrent.futures import TimeoutError as FutTimeout
     if series is None:
         series = task.series()
     tr, va, te, info = task.client_data(series)
@@ -626,11 +782,15 @@ def stream_evaluate(server: ForecastServer, task, series=None,
         sse: dict = {}
         cnt: dict = {}
         unroutable = 0
+        timed_out = 0
         for c, y_true, fut in pending:
             try:
                 y_hat = fut.result(timeout=timeout)[0]         # (T,)
             except KeyError:      # routing failure ONLY; shape errors raise
                 unroutable += 1
+                continue
+            except FutTimeout:    # one stuck request must not stall the replay
+                timed_out += 1
                 continue
             err = float(np.sum((np.asarray(y_hat, np.float64)
                                 - np.asarray(y_true, np.float64)) ** 2))
@@ -643,14 +803,18 @@ def stream_evaluate(server: ForecastServer, task, series=None,
     per_cluster = {c: {"rmse": float(np.sqrt(sse[c] / (cnt[c] * T))),
                        "windows": cnt[c]} for c in sorted(cnt, key=str)}
     total_cnt = sum(cnt.values())
-    return {
+    rep = {
         "overall_rmse": (float(np.sqrt(sum(sse.values()) / (total_cnt * T)))
                          if total_cnt else float("nan")),
         "windows": total_cnt,
         "unroutable": unroutable,
+        "timed_out": timed_out,
         "seconds": secs,
         "per_cluster": per_cluster,
     }
+    if include_metrics:
+        rep["metrics_text"] = server.metrics_text()
+    return rep
 
 
 def main():

@@ -1,0 +1,179 @@
+"""Tests for the Prometheus-style metrics registry (repro/launch/metrics.py):
+counter/gauge/histogram semantics, label-child caching, text exposition that
+round-trips through the parser (the format validator), cumulative le-buckets,
+quantile estimation, and thread-safety of the hot path."""
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.launch.metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge,
+                                  Histogram, MetricsRegistry,
+                                  parse_exposition, quantile_from_buckets,
+                                  sum_samples)
+
+
+# ---- families ---------------------------------------------------------------
+
+
+def test_counter_basics():
+    c = Counter("req_total", "requests", ("route",))
+    c.labels("a").inc()
+    c.labels("a").inc(2.5)
+    c.labels("b").inc()
+    assert c.get("a") == 3.5 and c.get("b") == 1.0
+    with pytest.raises(ValueError, match="only go up"):
+        c.labels("a").inc(-1)
+    with pytest.raises(ValueError, match="expected labels"):
+        c.labels("a", "extra")
+
+
+def test_labelless_counter_and_child_caching():
+    c = Counter("n_total", "n")
+    c.inc()
+    c.inc(4)
+    assert c.get() == 5.0
+    assert c.labels() is c.labels()  # one cached child, not one per call
+
+
+def test_gauge_set_inc_dec_and_fn():
+    g = Gauge("depth", "queue depth")
+    g.set(7)
+    g.inc(3)
+    g.dec()
+    assert g.get() == 9.0
+    state = {"v": 2.0}
+    fg = Gauge("live", "callback gauge", fn=lambda: state["v"])
+    assert fg.get() == 2.0
+    state["v"] = 5.5
+    assert fg.get() == 5.5
+    with pytest.raises(ValueError, match="function gauge"):
+        fg.labels().set(1.0)
+    with pytest.raises(ValueError, match="label-less"):
+        Gauge("bad", "x", ("l",), fn=lambda: 0.0)
+
+
+def test_histogram_cumulative_buckets():
+    h = Histogram("lat", "latency", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.1, 0.5, 2.0, 100.0):
+        h.observe(v)
+    cum, total, count = h.get()
+    # le=0.1 holds 0.05 AND the boundary value 0.1 (le is inclusive)
+    assert cum == [2, 3, 4, 5]
+    assert count == 5 and np.isclose(total, 102.65)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Histogram("bad", "x", buckets=(1.0, 1.0))
+
+
+def test_histogram_quantiles_roundtrip():
+    h = Histogram("lat", "latency", buckets=DEFAULT_LATENCY_BUCKETS)
+    rng = np.random.default_rng(0)
+    xs = rng.uniform(0.001, 0.1, size=2000)
+    for v in xs:
+        h.observe(float(v))
+    cum, _, _ = h.get()
+    for q in (0.5, 0.95, 0.99):
+        est = quantile_from_buckets(cum, h.bounds, q)
+        true = float(np.quantile(xs, q))
+        # bucket-resolution estimate: within the enclosing bucket's width
+        assert 0.5 * true <= est <= 2.0 * true, (q, est, true)
+    assert math.isnan(quantile_from_buckets([0, 0], (1.0,), 0.5))
+
+
+def test_registry_idempotent_and_conflicts():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "x", ("l",))
+    assert reg.counter("x_total", "x", ("l",)) is a  # re-declare: same family
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total", "x", ("l",))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("x_total", "x", ("other",))
+    with pytest.raises(ValueError, match="invalid metric name"):
+        reg.counter("1bad", "x")
+
+
+# ---- exposition + parsing ---------------------------------------------------
+
+
+def test_exposition_parses_and_reconciles():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests served", ("cluster",))
+    g = reg.gauge("depth", "queue depth")
+    h = reg.histogram("lat_seconds", "latency", ("cluster",),
+                      buckets=(0.01, 0.1))
+    c.labels("0").inc(3)
+    c.labels("1").inc(2)
+    g.set(4)
+    h.labels("0").observe(0.005)
+    h.labels("0").observe(0.05)
+    h.labels("0").observe(5.0)
+    text = reg.expose()
+    s = parse_exposition(text)  # raises on any malformed line
+    assert s[("req_total", (("cluster", "0"),))] == 3.0
+    assert sum_samples(s, "req_total") == 5.0
+    assert s[("depth", ())] == 4.0
+    assert s[("lat_seconds_bucket", (("cluster", "0"), ("le", "0.01")))] == 1.0
+    assert s[("lat_seconds_bucket", (("cluster", "0"), ("le", "0.1")))] == 2.0
+    assert s[("lat_seconds_bucket", (("cluster", "0"), ("le", "+Inf")))] == 3.0
+    assert s[("lat_seconds_count", (("cluster", "0"),))] == 3.0
+    assert np.isclose(s[("lat_seconds_sum", (("cluster", "0"),))], 5.055)
+    # HELP/TYPE lines precede every family
+    lines = text.splitlines()
+    for name, kind in (("req_total", "counter"), ("depth", "gauge"),
+                       ("lat_seconds", "histogram")):
+        assert f"# TYPE {name} {kind}" in lines
+
+
+def test_exposition_escapes_label_values():
+    reg = MetricsRegistry()
+    c = reg.counter("esc_total", "escaping", ("path",))
+    nasty = 'a"b\\c\nd'
+    c.labels(nasty).inc()
+    s = parse_exposition(reg.expose())
+    assert s[("esc_total", (("path", nasty),))] == 1.0
+
+
+def test_parser_rejects_malformed():
+    for bad in ("no_type_decl 1",
+                "# TYPE x counter\nx{l=unquoted} 1",
+                "# TYPE x counter\nx 1 2 3",
+                "# TYPE x wrongkind\nx 1",
+                "# TYPE x counter\nx notanumber"):
+        with pytest.raises(ValueError):
+            parse_exposition(bad)
+    # and the happy path accepts exactly the grammar we emit
+    ok = parse_exposition('# HELP x help text\n# TYPE x counter\n'
+                          'x{a="1",b="2"} 7\nx +Inf\n')
+    assert ok[("x", (("a", "1"), ("b", "2")))] == 7.0
+    assert ok[("x", ())] == float("inf")
+
+
+def test_parser_rejects_duplicate_series():
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_exposition("# TYPE x counter\nx 1\nx 2")
+
+
+# ---- hot-path thread-safety -------------------------------------------------
+
+
+def test_concurrent_recording_loses_nothing():
+    reg = MetricsRegistry()
+    c = reg.counter("hits_total", "hits", ("t",))
+    h = reg.histogram("obs", "observations", buckets=(0.5,))
+    N, THREADS = 2000, 8
+
+    def work(i):
+        child = c.labels(str(i % 2))
+        for _ in range(N):
+            child.inc()
+            h.observe(0.1)
+
+    ts = [threading.Thread(target=work, args=(i,)) for i in range(THREADS)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.get("0") + c.get("1") == N * THREADS
+    cum, total, count = h.get()
+    assert count == N * THREADS and cum[-1] == N * THREADS

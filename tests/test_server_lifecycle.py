@@ -1,0 +1,218 @@
+"""Lifecycle and robustness regressions for ForecastServer:
+
+  * ``close()`` fails every still-pending future with RuntimeError instead
+    of leaving waiters hanging forever (a blocked ``.result(timeout=...)``
+    raises PROMPTLY), and submits after close fail the same way;
+  * worker-side future resolution survives waiters that were cancelled
+    (gateway deadlines) — no InvalidStateError killing the worker thread;
+  * ``stream_evaluate``'s per-request timeout skips-and-counts stuck
+    futures rather than stalling the whole replay;
+  * the serving metrics the worker records reconcile with the traffic.
+"""
+import time
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FutTimeout
+
+import numpy as np
+import pytest
+
+from repro.core.forecaster import get_forecaster
+from repro.core.tasks import get_task
+from repro.launch.metrics import parse_exposition, sum_samples
+from repro.launch.serve_forecast import ForecastServer, stream_evaluate
+
+TINY = dict(look_back=16, horizon=2, d_model=16, num_heads=2, d_ff=16,
+            patch_len=8, stride=4)
+
+
+def _server(rng_key, **kw):
+    fc = get_forecaster("logtst", **TINY)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_ms", 1.0)
+    return ForecastServer(fc, fc.init_params(rng_key), **kw)
+
+
+# ---- close() ----------------------------------------------------------------
+
+
+def test_close_fails_pending_futures_promptly(rng_key):
+    """THE regression: requests stuck in the queue of a stopped/never-started
+    worker used to hang their waiters forever; close() must fail them."""
+    server = _server(rng_key)
+    x = np.ones((1, 16), np.float32)
+    # no worker running -> these sit in the queue unserved
+    futs = [server.submit(x) for _ in range(3)]
+    t0 = time.perf_counter()
+    server.close()
+    for f in futs:
+        with pytest.raises(RuntimeError, match="closed before this request"):
+            f.result(timeout=5)
+    assert time.perf_counter() - t0 < 5, "close() left waiters blocking"
+
+
+def test_submit_after_close_fails_promptly(rng_key):
+    server = _server(rng_key)
+    server.close()
+    fut = server.submit(np.ones((1, 16), np.float32))
+    with pytest.raises(RuntimeError, match="is closed"):
+        fut.result(timeout=5)
+    # malformed-request validation still fails with ITS error, not the
+    # closed-server one (validation precedes the lifecycle gate)
+    bad = server.submit(np.ones((3, 3), np.float32))
+    with pytest.raises(ValueError, match="look_back"):
+        bad.result(timeout=5)
+
+
+def test_close_is_idempotent_and_terminal(rng_key):
+    server = _server(rng_key)
+    server.start()
+    server.close()
+    server.close()  # second close: no-op, no error
+    with pytest.raises(RuntimeError, match="is closed"):
+        server.start()
+    # the synchronous direct path still serves (engines stay restored)
+    y = server.predict(np.ones((1, 16), np.float32))
+    assert y.shape == (1, 2)
+
+
+def test_close_after_serving_traffic(rng_key):
+    """Normal path: everything served before close resolves normally; the
+    request racing into the queue after stop() is failed, not hung."""
+    server = _server(rng_key)
+    server.warmup(channels=1)
+    server.start()
+    x = np.ones((1, 16), np.float32)
+    served = [server.submit(x) for _ in range(8)]
+    ys = [f.result(timeout=30) for f in served]
+    assert all(y.shape == (1, 2) for y in ys)
+    server.stop()
+    straggler = server.submit(x)   # worker paused: queued, unserved
+    server.close()
+    with pytest.raises(RuntimeError):
+        straggler.result(timeout=5)
+
+
+# ---- cancelled-waiter robustness -------------------------------------------
+
+
+def test_worker_survives_cancelled_waiter(rng_key):
+    """A waiter cancelled mid-queue (the gateway's deadline path) must not
+    blow up the worker with InvalidStateError — later requests in the SAME
+    coalesced group and subsequent windows still resolve."""
+    server = _server(rng_key, max_wait_ms=50.0)
+    server.warmup(channels=1)
+    x = np.ones((1, 16), np.float32)
+    doomed = server.submit(x)       # enqueued before the worker starts...
+    assert doomed.cancel()          # ...and cancelled while still queued
+    survivor = server.submit(x)
+    server.start()
+    try:
+        y = survivor.result(timeout=30)
+        assert y.shape == (1, 2)
+        # worker thread is still alive and serving new windows
+        again = server.submit(x)
+        assert again.result(timeout=30).shape == (1, 2)
+    finally:
+        server.close()
+
+
+# ---- stream_evaluate timeout ------------------------------------------------
+
+
+class _BlackholeServer(ForecastServer):
+    """Drops (never resolves) every Nth station's requests — a deterministic
+    stand-in for a stuck backend."""
+
+    def __init__(self, *a, drop_every=3, **kw):
+        super().__init__(*a, **kw)
+        self._drop_every = drop_every
+        self._seen = 0
+
+    def submit(self, x, station=None, cluster=None):
+        self._seen += 1
+        if self._seen % self._drop_every == 0:
+            return Future()  # never resolved
+        return super().submit(x, station=station, cluster=cluster)
+
+
+def test_stream_evaluate_timeout_skips_and_counts(rng_key):
+    task = get_task("ev", quick=True, num_clients=6, num_days=120,
+                    look_back=16, horizon=2)
+    fc = get_forecaster("logtst", **TINY)
+    server = _BlackholeServer(fc, fc.init_params(rng_key), max_batch=8,
+                              max_wait_ms=1.0, drop_every=3)
+    t0 = time.perf_counter()
+    ev = stream_evaluate(server, task, max_windows=2, timeout=1.0)
+    secs = time.perf_counter() - t0
+    assert ev["timed_out"] > 0
+    assert ev["windows"] > 0 and np.isfinite(ev["overall_rmse"])
+    assert ev["windows"] + ev["timed_out"] + ev["unroutable"] == \
+        len(task.client_data(task.series())[3]["kept"]) * 2
+    # the whole replay finished in bounded time: ~timeout per stuck future
+    # at worst, NOT forever (regression: one stuck request stalled it all)
+    assert secs < 60
+    server.close()
+
+
+def test_stream_evaluate_timeout_none_waits(rng_key):
+    """timeout=None keeps the old wait-forever contract on a healthy server
+    (and the report's timed_out field is present and zero)."""
+    task = get_task("ev", quick=True, num_clients=6, num_days=120,
+                    look_back=16, horizon=2)
+    server = _server(rng_key, max_batch=8)
+    ev = stream_evaluate(server, task, max_windows=2, timeout=None)
+    assert ev["timed_out"] == 0 and ev["windows"] > 0
+    server.close()
+
+
+def test_stream_evaluate_can_dump_metrics(rng_key):
+    task = get_task("ev", quick=True, num_clients=6, num_days=120,
+                    look_back=16, horizon=2)
+    server = _server(rng_key, max_batch=8)
+    ev = stream_evaluate(server, task, max_windows=2, include_metrics=True)
+    s = parse_exposition(ev["metrics_text"])  # valid exposition
+    assert sum_samples(s, "forecast_requests_total") >= ev["windows"]
+    assert sum_samples(s, "forecast_latency_seconds_count") >= ev["windows"]
+    server.close()
+
+
+# ---- worker-loop metrics reconcile ------------------------------------------
+
+
+def test_server_metrics_reconcile_with_traffic(rng_key):
+    server = _server(rng_key, max_batch=4)
+    server.warmup(channels=2)
+    base = parse_exposition(server.metrics_text())
+    warm_batches = sum_samples(base, "forecast_batches_total")
+    server.start()
+    x = np.ones((2, 16), np.float32)
+    futs = [server.submit(x) for _ in range(10)]
+    for f in futs:
+        f.result(timeout=30)
+    bad = server.submit(np.ones((2, 3), np.float32))  # malformed: rejected
+    with pytest.raises(ValueError):
+        bad.result(timeout=5)
+    server.stop()
+    s = parse_exposition(server.metrics_text())
+    assert sum_samples(s, "forecast_requests_total") == 10
+    assert sum_samples(s, "forecast_latency_seconds_count") == 10
+    assert sum_samples(s, "forecast_rejected_total", kind="malformed") == 1
+    # all traffic here (warmup included) is (2, 16)-shaped, and serving
+    # dispatched at least one batch beyond the warmup ones
+    assert sum_samples(s, "forecast_batches_total", shape="2x16") \
+        == sum_samples(s, "forecast_batches_total") > warm_batches
+    # padded slots + live rows account for every bucket slot dispatched
+    assert sum_samples(s, "forecast_series_served_total") \
+        == server.stats["series_served"]
+    # batch-fill histogram saw every dispatched batch
+    assert sum_samples(s, "forecast_batch_fill_count") \
+        == sum_samples(s, "forecast_batches_total")
+    server.close()
+
+
+def test_metrics_opt_out(rng_key):
+    server = _server(rng_key, metrics=False)
+    assert server.metrics is None and server.metrics_text() == ""
+    y = server.predict(np.ones((1, 16), np.float32))  # hot path unaffected
+    assert y.shape == (1, 2)
+    server.close()
