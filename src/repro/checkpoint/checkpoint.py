@@ -2,16 +2,46 @@
 
 Layout: <dir>/step_<n>/arrays.npz + manifest.json. Works for model params,
 optimizer state and FL server state alike; keys are the joined pytree paths.
+
+Writes are ATOMIC per file (tmp name in the same directory + ``os.replace``)
+and ordered payload-first, manifest-last: ``manifest.json`` is the
+completeness marker of a step, so a reader that can see a step's manifest can
+always load its payload, and a crashed/concurrent writer leaves at worst a
+manifest-less directory that :func:`latest_step` skips. A reader and a writer
+interleaving on the same checkpoint dir never observe a torn JSON or npz.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def atomic_write_bytes(path: str, data: bytes):
+    """Write ``data`` to ``path`` through a same-directory tmp file +
+    ``os.replace``: a concurrent reader sees either the old complete file or
+    the new complete file, never a partial write."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def atomic_write_json(path: str, obj, indent: int = 1):
+    atomic_write_bytes(path, json.dumps(obj, indent=indent).encode())
 
 
 def _path_str(path) -> str:
@@ -27,7 +57,11 @@ def _path_str(path) -> str:
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
-    """Serialize a pytree of arrays. Returns the step directory."""
+    """Serialize a pytree of arrays. Returns the step directory.
+
+    Both files land via tmp + ``os.replace``, payload before manifest: a
+    concurrent reader either misses the step entirely (no manifest yet —
+    :func:`latest_step` skips it) or sees a fully consistent one."""
     step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(step_dir, exist_ok=True)
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -38,9 +72,12 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -
         arrays[key] = np.asarray(leaf)
         manifest["keys"].append({"key": key, "dtype": str(leaf.dtype),
                                  "shape": list(leaf.shape)})
-    np.savez(os.path.join(step_dir, "arrays.npz"), **arrays)
-    with open(os.path.join(step_dir, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    import io
+
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    atomic_write_bytes(os.path.join(step_dir, "arrays.npz"), buf.getvalue())
+    atomic_write_json(os.path.join(step_dir, "manifest.json"), manifest)
     return step_dir
 
 
@@ -96,11 +133,24 @@ def read_manifest(ckpt_dir: str, step: int | None = None):
 
 
 def latest_step(ckpt_dir: str):
+    """Largest COMPLETE step in ``ckpt_dir`` (or None).
+
+    Non-step entries (``step_final``, stray files), non-numeric suffixes and
+    partially-written step directories — a writer mid-``save_checkpoint`` has
+    the payload but not yet the manifest — are all SKIPPED, not raised on:
+    the latest complete step is always loadable."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
         m = re.fullmatch(r"step_(\d+)", name)
-        if m:
-            steps.append(int(m.group(1)))
+        if not m:
+            continue
+        step_dir = os.path.join(ckpt_dir, name)
+        if not os.path.isdir(step_dir):
+            continue
+        if not (os.path.exists(os.path.join(step_dir, "manifest.json"))
+                and os.path.exists(os.path.join(step_dir, "arrays.npz"))):
+            continue  # torn/in-progress write: manifest lands last
+        steps.append(int(m.group(1)))
     return max(steps) if steps else None

@@ -11,3 +11,4 @@ from repro.core.fl.engine import (
     mix_down_count, run_fl, sample_cohort, shard_client_state, sync_round,
 )
 from repro.core.fl.client_store import ClientStore, run_fl_host
+from repro.core.fl.flywheel import DriftDetector, RetrainController

@@ -86,7 +86,8 @@ class ClientStore:
     swaps cheap (~``(L+T)``x smaller rows than materialized windows).
     """
 
-    def __init__(self, model_cfg, fl_cfg, train, test, key):
+    def __init__(self, model_cfg, fl_cfg, train, test, key,
+                 init_params=None):
         if not fl_cfg.streaming_windows:
             raise ValueError(
                 "ClientStore requires FLConfig.streaming_windows=True: the "
@@ -102,7 +103,8 @@ class ClientStore:
             raise ValueError(
                 f"train series has {train.shape[0]} clients, FLConfig says "
                 f"num_clients={fl_cfg.num_clients}")
-        params = forecast.init_params(model_cfg, key)
+        params = (forecast.init_params(model_cfg, key) if init_params is None
+                  else init_params)
         vec, self.meta = tree_flatten_to_vector(params)
         self.model_cfg, self.fl_cfg = model_cfg, fl_cfg
         self.w_global = vec                               # device (D,)
@@ -171,7 +173,8 @@ class ClientStore:
 def run_fl_host(model_cfg, fl_cfg, train_data, test_data, key, *,
                 max_rounds: int = 300, patience: int = 10,
                 eval_every: int = 10, verbose: bool = False, policy=None,
-                checkpoint_dir: Optional[str] = None) -> dict:
+                checkpoint_dir: Optional[str] = None,
+                init_params=None) -> dict:
     """The ``run_fl(driver="host")`` implementation: loop-driver round/stop
     semantics with the ``(K, D)`` client state host-resident and only the
     per-round cohort on device. See the module docstring for the round cycle
@@ -181,7 +184,8 @@ def run_fl_host(model_cfg, fl_cfg, train_data, test_data, key, *,
     training."""
     policy = pol.from_config(fl_cfg) if policy is None else policy
     key, init_key = jax.random.split(key)
-    store = ClientStore(model_cfg, fl_cfg, train_data, test_data, init_key)
+    store = ClientStore(model_cfg, fl_cfg, train_data, test_data, init_key,
+                        init_params=init_params)
     W = model_cfg.look_back + model_cfg.horizon
     if min(store.train.shape[1], store.test.shape[1]) < W:
         raise ValueError(

@@ -318,9 +318,15 @@ def sync_round(local, global_, key, policy, select_ratio: float):
 # ---------------------------------------------------------------------------
 
 
-def init_fl_state(model_cfg: forecast.ForecastConfig, fl_cfg: FLConfig, key):
-    """State: global vector, per-client vectors + per-client Adam moments."""
-    params = forecast.init_params(model_cfg, key)
+def init_fl_state(model_cfg: forecast.ForecastConfig, fl_cfg: FLConfig, key,
+                  init_params=None):
+    """State: global vector, per-client vectors + per-client Adam moments.
+
+    ``init_params`` WARM-STARTS the run from an existing param pytree (the
+    flywheel's retrain path fine-tunes the serving checkpoint instead of
+    re-learning from scratch); optimizer moments still start at zero."""
+    params = (forecast.init_params(model_cfg, key) if init_params is None
+              else init_params)
     vec, meta = tree_flatten_to_vector(params)
     K = fl_cfg.num_clients
     state = {
@@ -778,9 +784,15 @@ def run_fl(
     policy=None,
     shard_clients: bool = False,
     checkpoint_dir: Optional[str] = None,
+    init_params=None,
 ):
     """Multi-round FL driver. Returns a history dict with per-round loss,
     cumulative comm, and final RMSE.
+
+    ``init_params`` warm-starts every client (and the global model) from an
+    existing param pytree instead of a fresh init — the flywheel's
+    per-cluster retrain fine-tunes the live serving checkpoint on grown
+    data; Adam moments and the round/comm counters still start at zero.
 
     ``train_data``/``test_data`` arrive in one of two layouts, selected by
     ``fl_cfg.streaming_windows``:
@@ -849,7 +861,8 @@ def run_fl(
         return run_fl_host(model_cfg, fl_cfg, train_data, test_data, key,
                            max_rounds=max_rounds, patience=patience,
                            eval_every=eval_every, verbose=verbose,
-                           policy=policy, checkpoint_dir=checkpoint_dir)
+                           policy=policy, checkpoint_dir=checkpoint_dir,
+                           init_params=init_params)
     want = 2 if fl_cfg.streaming_windows else 3
     if train_data.ndim != want or test_data.ndim != want:
         raise ValueError(
@@ -867,7 +880,8 @@ def run_fl(
                 f"train T={train_data.shape[1]}, test T={test_data.shape[1]}")
     policy = pol.from_config(fl_cfg) if policy is None else policy
     key, init_key = jax.random.split(key)
-    state, meta = init_fl_state(model_cfg, fl_cfg, init_key)
+    state, meta = init_fl_state(model_cfg, fl_cfg, init_key,
+                                init_params=init_params)
     if shard_clients:
         state = shard_client_state(state)
 

@@ -1,0 +1,339 @@
+"""Train→serve flywheel: drift-triggered per-cluster retraining that
+publishes GENERATIONAL routing manifests for zero-drop hot-swap serving.
+
+The paper's communication-efficient FL system trains one global forecaster
+per DTW cluster; production only keeps paying off if those models track the
+non-homogeneous, DRIFTING demand the paper highlights. This module closes
+the loop that ``stream_evaluate`` (online per-cluster RMSE) opened:
+
+    fresh windows -> RetrainController.append_windows
+    online RMSE   -> DriftDetector (trailing-quantile trigger, per cluster)
+    trigger fires -> run_fl for JUST the drifted cluster (same
+                     ExperimentSpec / participation machinery as training)
+    new model     -> checkpoint under a generation-suffixed subdir +
+                     tasks.update_routing_manifest publishes generation N+1
+                     atomically (snapshot file, then os.replace)
+    serving       -> ForecastServer.reload / watch_manifest hot-swaps to the
+                     new generation without dropping a request (old
+                     generation's queued futures drain through their own
+                     engines — see repro.launch.serve_forecast)
+
+Both triggers the roadmap asks for are here: DRIFT (``observe`` +
+``step``: online RMSE for a cluster exceeding a trailing-quantile threshold
+retrains that cluster only) and TIMER (``start_timer``: periodic retraining
+on a background thread, e.g. nightly refresh with whatever windows arrived).
+
+Usage (drift-driven, the closed loop)::
+
+    ctl = RetrainController(spec, ckpt_root, series=series, server=server)
+    server.watch_manifest(interval_s=2.0)         # serving side of the loop
+    ...
+    ctl.append_windows(new_columns)               # fresh (K, t) observations
+    rep = stream_evaluate(server, spec.task, series=ctl.series)
+    result = ctl.step(rep)                        # retrains drifted clusters
+    result["retrained"]                           # e.g. {1: {...row...}}
+    result["generation"]                          # manifest generation now
+
+Demoed end to end in ``examples/flywheel_demo.py``; benchmarked (hot swap
+under closed-loop HTTP load, zero dropped requests, RMSE recovery after an
+injected drift step) in ``benchmarks/flywheel.py`` ->
+``experiments/flywheel/results.json``; documented in docs/flywheel.md.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DriftDetector:
+    """Per-cluster trailing-quantile drift trigger over online RMSE.
+
+    Each cluster keeps a trailing window of the last ``window`` online-RMSE
+    observations (from ``stream_evaluate`` or the serving metrics). A
+    cluster has DRIFTED when its latest observation exceeds
+    ``tolerance * quantile(trailing history, q)`` — the history EXCLUDES the
+    latest point, so one bad reading is judged against the trailing baseline,
+    not against itself. ``min_obs`` baseline points are required before the
+    trigger can fire (a cold detector never fires), and :meth:`reset` clears
+    a cluster's history after its retrain so the new model builds a fresh
+    baseline instead of being compared against pre-drift numbers.
+    """
+
+    def __init__(self, window: int = 16, quantile: float = 0.9,
+                 tolerance: float = 1.25, min_obs: int = 3):
+        if not 0.0 < quantile <= 1.0:
+            raise ValueError(f"quantile must be in (0, 1], got {quantile}")
+        if tolerance <= 0 or window < 2 or min_obs < 1:
+            raise ValueError(
+                f"need tolerance > 0, window >= 2, min_obs >= 1; got "
+                f"{tolerance}, {window}, {min_obs}")
+        self.window = int(window)
+        self.quantile = float(quantile)
+        self.tolerance = float(tolerance)
+        self.min_obs = int(min_obs)
+        self._history: Dict[object, deque] = {}
+        self._lock = threading.Lock()
+
+    def record(self, cluster, rmse: float):
+        if not np.isfinite(rmse):
+            return  # an empty/unroutable replay must not poison the baseline
+        with self._lock:
+            self._history.setdefault(
+                cluster, deque(maxlen=self.window + 1)).append(float(rmse))
+
+    def threshold(self, cluster) -> Optional[float]:
+        """The current trigger level for ``cluster`` (None while the
+        baseline is still warming up)."""
+        with self._lock:
+            h = self._history.get(cluster)
+            if h is None or len(h) < self.min_obs + 1:
+                return None
+            baseline = list(h)[:-1]
+        return self.tolerance * float(np.quantile(baseline, self.quantile))
+
+    def drifted(self, cluster) -> bool:
+        thr = self.threshold(cluster)
+        if thr is None:
+            return False
+        with self._lock:
+            latest = self._history[cluster][-1]
+        return latest > thr
+
+    def drifted_clusters(self):
+        with self._lock:
+            clusters = list(self._history)
+        return [c for c in clusters if self.drifted(c)]
+
+    def reset(self, cluster):
+        with self._lock:
+            self._history.pop(cluster, None)
+
+
+class RetrainController:
+    """The write side of the flywheel: owns the LIVE series, retrains one
+    cluster at a time through the exact ``ExperimentSpec`` machinery that
+    trained generation 0, and publishes each retrain as manifest generation
+    N+1 (checkpoint under a generation-suffixed subdir, then
+    ``tasks.update_routing_manifest``'s atomic snapshot-and-replace).
+
+    Only the retrained clusters' state moves between generations: untouched
+    clusters keep their checkpoint subdir (so ``ForecastServer.reload``
+    reuses their live engines) and their stations keep the norm stats their
+    model trained under — stats move ONLY for stations whose model actually
+    retrained on the grown series.
+    """
+
+    def __init__(self, spec, checkpoint_root: str,
+                 series: Optional[np.ndarray] = None,
+                 labels: Optional[np.ndarray] = None,
+                 server=None,
+                 detector: Optional[DriftDetector] = None,
+                 policy: Optional[str] = None,
+                 reload_server: bool = True,
+                 warm_start: bool = True,
+                 verbose: bool = False):
+        from repro.core.tasks import read_routing_manifest, run_name
+
+        self.spec = spec
+        self.checkpoint_root = checkpoint_root
+        self.series = np.asarray(series if series is not None
+                                 else spec.task.series())
+        self.labels = np.asarray(labels if labels is not None
+                                 else spec.task.cluster_labels(self.series))
+        self.server = server
+        self.detector = detector or DriftDetector()
+        self.reload_server = reload_server
+        self.warm_start = warm_start
+        self.verbose = verbose
+        # one grid entry drives retraining; default: the spec's only entry
+        if policy is None:
+            if len(spec.grid) != 1:
+                raise ValueError(
+                    f"spec has {len(spec.grid)} grid entries; pass policy=")
+            policy = run_name(*spec.grid[0])
+        self.policy = policy
+        self._grid_entry = None
+        for name, overrides in spec.grid:
+            if run_name(name, overrides) == policy:
+                self._grid_entry = (name, overrides)
+        if self._grid_entry is None:
+            raise KeyError(f"policy {policy!r} not in the spec grid "
+                           f"({[run_name(*g) for g in spec.grid]})")
+        # sanity: the manifest must exist (generation 0 trained already)
+        read_routing_manifest(checkpoint_root)
+        self._lock = threading.Lock()   # serializes retrain/publish
+        self._timer: Optional[threading.Thread] = None
+        self._timer_stop: Optional[threading.Event] = None
+
+    # ---- live data --------------------------------------------------------
+    def append_windows(self, new_obs: np.ndarray):
+        """Append fresh observations — ``(K, t)`` new columns, one row per
+        station of the ORIGINAL fleet — to the live series. This is the
+        DataCollector side of the flywheel; the next retrain of any cluster
+        trains (and recomputes norm stats) on the grown series."""
+        new_obs = np.asarray(new_obs)
+        if new_obs.ndim != 2 or new_obs.shape[0] != self.series.shape[0]:
+            raise ValueError(
+                f"new observations must be (num_stations="
+                f"{self.series.shape[0]}, t), got {new_obs.shape}")
+        with self._lock:
+            self.series = np.concatenate(
+                [self.series, new_obs.astype(self.series.dtype)], axis=1)
+        return self.series.shape
+
+    # ---- drift trigger ----------------------------------------------------
+    def observe(self, report: dict):
+        """Feed one round of online RMSE into the drift detector and return
+        the clusters whose trigger fired. ``report`` is either a
+        ``stream_evaluate`` report (``{"per_cluster": {c: {"rmse": ...}}}``)
+        or a plain ``{cluster: rmse}`` dict."""
+        per_cluster = report.get("per_cluster", report)
+        for c, v in per_cluster.items():
+            rmse = v["rmse"] if isinstance(v, dict) else float(v)
+            self.detector.record(c, rmse)
+        return self.detector.drifted_clusters()
+
+    # ---- retraining -------------------------------------------------------
+    def retrain(self, clusters: Sequence) -> dict:
+        """Re-run ``run_fl`` for EXACTLY the given clusters on the current
+        series and publish ONE new manifest generation covering them all.
+
+        Per cluster: rebuild its clients' datasets from the live series
+        (same clean/z-norm/split pipeline as training), run the spec's FL
+        config with a generation-folded key — WARM-STARTED from the
+        cluster's live serving checkpoint unless ``warm_start=False``, so a
+        few rounds fine-tune the model onto the grown data instead of
+        re-learning from scratch — checkpoint the new global model under
+        ``<policy>_c<cluster>_g<generation>``, and stage the cluster's new
+        subdir + its stations' new norm stats. Publication is one
+        ``update_routing_manifest`` call — atomic, monotonic generation.
+        Returns ``{"generation", "rows": {cluster: row}}``.
+        """
+        import os
+
+        from repro.core.fl.engine import run_fl
+        from repro.core.forecaster import load_forecaster
+        from repro.core.tasks import read_routing_manifest, update_routing_manifest
+
+        if not clusters:
+            raise ValueError("no clusters to retrain")
+        spec, task = self.spec, self.spec.task
+        policy_name, overrides = self._grid_entry
+        with self._lock:
+            series = self.series
+            current_gen, manifest = read_routing_manifest(self.checkpoint_root)
+            generation = current_gen + 1
+            subdirs, norm_updates, rows = {}, {}, {}
+            for c in clusters:
+                idx = (None if c is None
+                       else np.nonzero(self.labels == c)[0])
+                if idx is not None and len(idx) < task.min_cluster_clients:
+                    raise ValueError(
+                        f"cluster {c} has {0 if idx is None else len(idx)} "
+                        f"clients < min_cluster_clients="
+                        f"{task.min_cluster_clients}")
+                tr, va, te, info = task.client_data(
+                    series, idx, streaming=spec.streaming_windows)
+                fl_cfg = spec.fl_config(policy_name, tr.shape[0], overrides)
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(spec.seed + (c or 0)), generation)
+                init_params = None
+                if self.warm_start:
+                    live = manifest["policies"][self.policy].get(str(c or 0))
+                    if live is not None:
+                        _, init_params, _ = load_forecaster(
+                            os.path.join(self.checkpoint_root, live))
+                sub = f"{self.policy}_c{c or 0}_g{generation}"
+                t0 = time.time()
+                hist = run_fl(
+                    spec.model.cfg, fl_cfg, jnp.asarray(tr), jnp.asarray(te),
+                    key, max_rounds=spec.max_rounds, patience=spec.patience,
+                    eval_every=spec.eval_every, driver=spec.driver,
+                    shard_clients=spec.shard_clients, verbose=self.verbose,
+                    checkpoint_dir=f"{self.checkpoint_root}/{sub}",
+                    init_params=init_params)
+                subdirs[str(c or 0)] = sub
+                if idx is not None:
+                    from repro.data.windowing import series_norm_stats
+
+                    mu, sd = series_norm_stats(series[idx])
+                    for s, m, d in zip(idx.tolist(), mu.ravel(), sd.ravel()):
+                        norm_updates[s] = (float(m), float(d))
+                rows[c] = {
+                    "policy": self.policy, "cluster": c,
+                    "clients": int(tr.shape[0]),
+                    "rounds": int(hist["rounds_run"]),
+                    "rmse": float(hist["final_rmse"]),
+                    "comm_params": float(hist["final_comm"]),
+                    "train_s": round(time.time() - t0, 2),
+                    "generation": generation,
+                }
+            gen, _ = update_routing_manifest(
+                self.checkpoint_root, self.policy, subdirs,
+                station_norm=norm_updates or None)
+        for c in clusters:
+            self.detector.reset(c)
+        if self.server is not None and self.reload_server:
+            self.server.reload()
+        return {"generation": gen, "rows": rows}
+
+    def step(self, report: Optional[dict] = None) -> dict:
+        """ONE drift-driven flywheel turn: record the online RMSE report,
+        retrain every cluster whose trailing-quantile trigger fired, publish
+        the new generation, hot-swap the attached server. Returns
+        ``{"drifted": [...], "retrained": {cluster: row}, "generation"}``
+        (generation unchanged when nothing fired)."""
+        from repro.core.tasks import read_routing_manifest
+
+        drifted = self.observe(report) if report is not None else \
+            self.detector.drifted_clusters()
+        out = {"drifted": list(drifted), "retrained": {},
+               "generation": read_routing_manifest(self.checkpoint_root)[0]}
+        if drifted:
+            res = self.retrain(drifted)
+            out["retrained"] = res["rows"]
+            out["generation"] = res["generation"]
+        return out
+
+    # ---- timer trigger ----------------------------------------------------
+    def start_timer(self, interval_s: float,
+                    clusters: Optional[Sequence] = None):
+        """The TIMER trigger: a daemon thread retrains ``clusters`` (default:
+        every cluster in the manifest's policy map) every ``interval_s``
+        seconds on whatever windows have been appended by then — the
+        periodic-refresh mode. Idempotent; stop with :meth:`stop_timer`."""
+        from repro.core.tasks import read_routing_manifest
+
+        if self._timer is not None:
+            return self._timer
+        if clusters is None:
+            _, manifest = read_routing_manifest(self.checkpoint_root)
+            clusters = sorted(int(k)
+                              for k in manifest["policies"][self.policy])
+        self._timer_stop = threading.Event()
+
+        def _tick():
+            while not self._timer_stop.wait(interval_s):
+                try:
+                    self.retrain(list(clusters))
+                except Exception:
+                    pass  # a failed refresh retries next tick
+
+        self._timer = threading.Thread(target=_tick, daemon=True,
+                                       name="flywheel-timer")
+        self._timer.start()
+        return self._timer
+
+    def stop_timer(self):
+        if self._timer is None:
+            return
+        self._timer_stop.set()
+        self._timer.join()
+        self._timer = None
+        self._timer_stop = None

@@ -32,6 +32,7 @@ import argparse
 import dataclasses
 import json
 import os
+import re
 import time
 from typing import Optional, Tuple
 
@@ -222,11 +223,64 @@ def run_name(policy: str, overrides: dict) -> str:
 
 
 ROUTING_MANIFEST = "routing.json"
+_GENERATION_RE = re.compile(r"routing\.g(\d+)\.json$")
+
+
+def _generation_path(checkpoint_dir: str, generation: int) -> str:
+    return os.path.join(checkpoint_dir, f"routing.g{generation:06d}.json")
+
+
+def manifest_generations(checkpoint_dir: str):
+    """Sorted generation numbers with a COMPLETE per-generation snapshot
+    (``routing.g<N>.json``) on disk. Legacy roots (a bare ``routing.json``
+    only) return ``[]`` — their single manifest is generation 0."""
+    if not os.path.isdir(checkpoint_dir):
+        return []
+    gens = []
+    for name in os.listdir(checkpoint_dir):
+        m = _GENERATION_RE.fullmatch(name)
+        if m:
+            gens.append(int(m.group(1)))
+    return sorted(gens)
+
+
+def read_routing_manifest(checkpoint_dir: str,
+                          generation: Optional[int] = None):
+    """Read the LATEST COMPLETE generation of the routing manifest (or a
+    pinned ``generation``). Returns ``(generation, manifest_dict)``.
+
+    ``routing.json`` always points at the newest generation (it is replaced
+    atomically, so it is never torn by a well-behaved writer), but the
+    per-generation snapshots written alongside it make the read robust
+    end-to-end: a corrupt/legacy-torn ``routing.json`` falls back to the
+    highest generation snapshot that parses, and a pinned read serves a
+    specific generation for rollback. Manifests written before generations
+    existed read as generation 0."""
+    if generation is not None:
+        with open(_generation_path(checkpoint_dir, generation)) as f:
+            manifest = json.load(f)
+        return int(manifest.get("generation", generation)), manifest
+    candidates = [os.path.join(checkpoint_dir, ROUTING_MANIFEST)]
+    candidates += [_generation_path(checkpoint_dir, g)
+                   for g in reversed(manifest_generations(checkpoint_dir))]
+    err: Optional[Exception] = None
+    for path in candidates:
+        try:
+            with open(path) as f:
+                manifest = json.load(f)
+            return int(manifest.get("generation", 0)), manifest
+        except FileNotFoundError as exc:
+            err = err or exc
+        except json.JSONDecodeError as exc:  # torn legacy write: fall back
+            err = err or exc
+    raise FileNotFoundError(
+        f"no complete routing manifest under {checkpoint_dir}") from err
 
 
 def write_routing_manifest(checkpoint_dir: str, task: ForecastTask,
                            model: Forecaster, labels: np.ndarray,
-                           rows, series: Optional[np.ndarray] = None) -> str:
+                           rows, series: Optional[np.ndarray] = None,
+                           generation: Optional[int] = None) -> str:
     """Index every checkpointed run for the routed serving layer
     (``ForecastServer.from_manifest``): ``<checkpoint_dir>/routing.json`` maps
     policy label -> cluster label -> checkpoint subdir, plus the per-station
@@ -251,12 +305,28 @@ def write_routing_manifest(checkpoint_dir: str, task: ForecastTask,
     Pooled runs (``task.clusters == 0``) write a single cluster ``"0"`` with
     an all-zeros station map. Clusters skipped for ``min_cluster_clients``
     have no entry — the server fails only those stations' requests.
+
+    MANIFESTS ARE GENERATIONAL: every write carries a monotonic
+    ``generation`` counter (``None`` = bump past whatever is on disk; a
+    fresh root starts at 0), lands as an immutable per-generation snapshot
+    ``routing.g<N>.json`` first, and only then atomically replaces
+    ``routing.json`` (tmp + ``os.replace``). A concurrent reader — a
+    ``ForecastServer.watch_manifest`` poller mid-hot-swap — therefore sees
+    either the previous complete generation or the new complete one, never a
+    torn file; :func:`read_routing_manifest` is the matching reader.
     """
+    os.makedirs(checkpoint_dir, exist_ok=True)
+    if generation is None:
+        try:
+            generation = read_routing_manifest(checkpoint_dir)[0] + 1
+        except FileNotFoundError:
+            generation = 0
     policies: dict = {}
     for r in rows:
         sub = r["policy"] + ("" if r["cluster"] is None else f"_c{r['cluster']}")
         policies.setdefault(r["policy"], {})[str(r["cluster"] or 0)] = sub
     manifest = {
+        "generation": int(generation),
         "task": task.name,
         "model": model.name,
         "look_back": task.look_back,
@@ -269,11 +339,47 @@ def write_routing_manifest(checkpoint_dir: str, task: ForecastTask,
         mu, sd = series_norm_stats(np.asarray(series))
         manifest["norm"] = {"mu": mu.ravel().tolist(),
                            "sd": sd.ravel().tolist()}
-    os.makedirs(checkpoint_dir, exist_ok=True)
+    return _publish_manifest(checkpoint_dir, manifest)
+
+
+def _publish_manifest(checkpoint_dir: str, manifest: dict) -> str:
+    """Snapshot-then-swap: the per-generation file is the durable record,
+    the atomic replace of ``routing.json`` is the publication."""
+    from repro.checkpoint import atomic_write_json
+
+    atomic_write_json(_generation_path(checkpoint_dir,
+                                       manifest["generation"]), manifest)
     path = os.path.join(checkpoint_dir, ROUTING_MANIFEST)
-    with open(path, "w") as f:
-        json.dump(manifest, f, indent=1)
+    atomic_write_json(path, manifest)
     return path
+
+
+def update_routing_manifest(checkpoint_dir: str, policy: str,
+                            cluster_subdirs: dict,
+                            station_norm: Optional[dict] = None) -> Tuple[int, str]:
+    """Publish generation N+1 of an existing manifest with ONLY the given
+    clusters' checkpoint subdirs (and optionally some stations' norm stats)
+    replaced — the flywheel's per-cluster retrain path. ``cluster_subdirs``
+    maps cluster label -> new subdir; ``station_norm`` maps station id ->
+    ``(mu, sd)`` (stats move only for stations whose model actually
+    retrained — other clusters' models still serve under the stats they
+    trained with). Returns ``(new_generation, manifest_path)``."""
+    gen, manifest = read_routing_manifest(checkpoint_dir)
+    manifest = json.loads(json.dumps(manifest))  # deep copy, stays JSON-pure
+    manifest["generation"] = gen + 1
+    if policy not in manifest["policies"]:
+        raise KeyError(f"unknown policy {policy!r}; manifest has "
+                       f"{sorted(manifest['policies'])}")
+    for c, sub in cluster_subdirs.items():
+        manifest["policies"][policy][str(c)] = sub
+    if station_norm:
+        if "norm" not in manifest:
+            raise ValueError("manifest has no 'norm' stats to update")
+        for s, (mu, sd) in station_norm.items():
+            manifest["norm"]["mu"][int(s)] = float(mu)
+            manifest["norm"]["sd"][int(s)] = float(sd)
+    path = _publish_manifest(checkpoint_dir, manifest)
+    return gen + 1, path
 
 
 def run_experiment(spec: ExperimentSpec, checkpoint_dir: Optional[str] = None,

@@ -14,7 +14,10 @@ stdlib-only asyncio HTTP/1.1 gateway (handcrafted request parsing over
     units by default and ``"raw": false`` opts a request back into
     normalized units (the gateway resolves the cluster itself, same trick
     as ``stream_evaluate``).
-  * ``GET /healthz``  — liveness + drain state (503 while draining).
+  * ``GET /healthz``  — liveness + drain state (503 while draining) + the
+    ACTIVE routing-manifest generation (the hot-swap observability hook:
+    after a ``ForecastServer.reload`` the reported generation moves with
+    zero dropped requests — see docs/flywheel.md).
   * ``GET /metricz``  — the server registry + gateway metrics in Prometheus
     text exposition format (``repro.launch.metrics``).
 
@@ -364,6 +367,7 @@ class ForecastGateway:
             return await self._respond(writer, code, {
                 "status": "draining" if self._draining else "ok",
                 "clusters": len(self.server.engines),
+                "generation": getattr(self.server, "generation", None),
                 "pending": self._pending,
             }, route="healthz")
         if path == "/metricz" and method == "GET":

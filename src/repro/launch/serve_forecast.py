@@ -43,7 +43,17 @@ module turns those checkpoints into a batched, routed inference endpoint:
     worker, fails every still-pending future with ``RuntimeError``, and
     fails anything submitted afterwards — waiters never hang on a dead
     server (``stop()`` remains the pausable variant: the worker drains its
-    current window and can be ``start()``-ed again).
+    current window and can be ``start()``-ed again);
+  * the routing state (engines + station table + norm stats) lives in one
+    swappable GENERATION snapshot: :meth:`ForecastServer.reload` restores a
+    newer manifest generation's changed clusters, warms them off the serving
+    path, and publishes the snapshot with a single atomic store —
+    zero-drop hot swap (queued old-generation requests drain through their
+    own engines; see docs/flywheel.md) — while
+    :meth:`ForecastServer.watch_manifest` runs that reload from a background
+    poller and ``repro.core.fl.flywheel.RetrainController`` is the writer
+    that produces the new generations (drift-triggered per-cluster
+    retraining).
 
 Routing manifest format (written by ``repro.core.tasks.run_experiment`` via
 ``write_routing_manifest`` at ``<checkpoint_dir>/routing.json``)::
@@ -187,6 +197,42 @@ class _ClusterEngine:
         return result
 
 
+class _Generation:
+    """One immutable ROUTING SNAPSHOT: the per-cluster engines, the
+    station->cluster table, the per-station norm stats and the monotonic
+    ``generation`` number they were published under. The server holds exactly
+    one live snapshot and swaps whole snapshots atomically (a single
+    attribute store); every request reads ONE snapshot at entry and queued
+    requests carry a reference to theirs, so a hot swap can never leave a
+    request half-routed — old-generation futures drain through the
+    old-generation engines, which are released (GC'd) only after the last
+    queued reference resolves."""
+
+    __slots__ = ("generation", "engines", "station_cluster", "station_norm",
+                 "default", "sources")
+
+    def __init__(self, generation: int, engines: Dict,
+                 station_cluster=None, station_norm=None,
+                 sources: Optional[Dict] = None):
+        self.generation = int(generation)
+        self.engines = engines
+        self.station_cluster = (None if station_cluster is None
+                                else [int(c) for c in station_cluster])
+        # (mu, sd) per station: when set, station-routed requests are RAW —
+        # normalized in, forecasts denormalized out (see _norm_for)
+        self.station_norm = None
+        if station_norm is not None:
+            mu, sd = station_norm
+            self.station_norm = (np.asarray(mu, np.float32).ravel(),
+                                 np.asarray(sd, np.float32).ravel())
+        self.default = (next(iter(engines))
+                        if len(engines) == 1 else _NO_DEFAULT)
+        # cluster -> checkpoint subdir each engine was restored from: reload
+        # reuses the live engine when a cluster's subdir is unchanged, so a
+        # per-cluster retrain rebuilds ONLY the retrained cluster's engine
+        self.sources = dict(sources or {})
+
+
 class ForecastServer:
     """Batched, bucketed, micro-batching inference over one forecaster or a
     ROUTED family of per-cluster forecasters.
@@ -201,6 +247,15 @@ class ForecastServer:
         server = ForecastServer.from_manifest(ckpt_root)
         server.submit(x, station=17)     # routed by station 17's cluster
         server.predict(x, cluster=1)     # or routed explicitly
+
+    The routing state lives in a swappable :class:`_Generation` snapshot:
+    :meth:`reload` re-reads the (generational) routing manifest, restores the
+    changed clusters' checkpoints and warms their buckets OFF the serving
+    path, then atomically publishes the new snapshot — in-flight and queued
+    requests keep the snapshot they were admitted under, so a hot swap drops
+    nothing and no request ever observes a half-swapped server.
+    :meth:`watch_manifest` runs that reload on a background poller whenever
+    the manifest's generation moves.
     """
 
     def __init__(self, forecaster: Optional[Forecaster] = None, params=None,
@@ -212,7 +267,8 @@ class ForecastServer:
                  station_cluster: Optional[Sequence[int]] = None,
                  station_norm: Optional[Tuple] = None,
                  shard_batch: bool = False,
-                 metrics: bool = True):
+                 metrics: bool = True,
+                 generation: int = 0):
         if models is None:
             if forecaster is None or params is None:
                 raise ValueError("pass (forecaster, params) or models=")
@@ -220,29 +276,25 @@ class ForecastServer:
         self.buckets = tuple(sorted(set(buckets or batch_buckets(max_batch))))
         self.max_batch = self.buckets[-1]
         self.max_wait_ms = max_wait_ms
-        shardings = None
+        self._shardings = None
         if shard_batch and len(jax.devices()) > 1:
             from repro.core.fl.engine import axis0_shardings
             from repro.launch.mesh import make_batch_mesh
 
-            shardings = axis0_shardings("batch", mesh=make_batch_mesh())
-        self.engines = {c: _ClusterEngine(fc, p, shardings)
-                        for c, (fc, p) in models.items()}
-        self.station_cluster = (None if station_cluster is None
-                                else [int(c) for c in station_cluster])
-        # (mu, sd) per station: when set, station-routed requests are RAW —
-        # normalized in, forecasts denormalized out (see _norm_for)
-        self.station_norm = None
-        if station_norm is not None:
-            mu, sd = station_norm
-            self.station_norm = (np.asarray(mu, np.float32).ravel(),
-                                 np.asarray(sd, np.float32).ravel())
-        self._default = (next(iter(self.engines))
-                         if len(self.engines) == 1 else _NO_DEFAULT)
+            self._shardings = axis0_shardings("batch", mesh=make_batch_mesh())
+        self._gen = _Generation(
+            generation,
+            {c: _ClusterEngine(fc, p, self._shardings)
+             for c, (fc, p) in models.items()},
+            station_cluster=station_cluster, station_norm=station_norm)
+        self._manifest_source: Optional[dict] = None  # set by from_manifest
+        self._reload_lock = threading.Lock()   # serializes builds + swaps
+        self._watch_thread: Optional[threading.Thread] = None
+        self._watch_stop: Optional[threading.Event] = None
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
-                      "series_served": 0}
+                      "series_served": 0, "reloads": 0}
         self.cluster_stats = {c: {"requests": 0, "series_served": 0}
-                              for c in self.engines}
+                              for c in self._gen.engines}
         self._queue: "queue.Queue" = queue.Queue()
         self._worker_thread: Optional[threading.Thread] = None
         self._closed = False
@@ -250,6 +302,37 @@ class ForecastServer:
         self.metrics: Optional[MetricsRegistry] = None
         if metrics:
             self._init_metrics()
+
+    # --- generation snapshot (compat views) -------------------------------
+    @property
+    def generation(self) -> int:
+        """The ACTIVE generation number (what /healthz and /metricz show)."""
+        return self._gen.generation
+
+    @property
+    def engines(self) -> Dict:
+        return self._gen.engines
+
+    @property
+    def station_cluster(self):
+        return self._gen.station_cluster
+
+    @property
+    def station_norm(self):
+        return self._gen.station_norm
+
+    @property
+    def _default(self):
+        return self._gen.default
+
+    def _cluster_stats(self, cluster) -> dict:
+        """Per-cluster tallies survive swaps; a reload that introduces a new
+        cluster label grows the table on first traffic."""
+        st = self.cluster_stats.get(cluster)
+        if st is None:
+            st = self.cluster_stats.setdefault(
+                cluster, {"requests": 0, "series_served": 0})
+        return st
 
     def _init_metrics(self):
         """Declare the serving metric families (catalogued in
@@ -294,6 +377,13 @@ class ForecastServer:
                 fn=self._queue.qsize)
         m.gauge("forecast_clusters", "restored cluster engines",
                 fn=lambda: float(len(self.engines)))
+        m.gauge("forecast_generation",
+                "active routing-manifest generation",
+                fn=lambda: float(self._gen.generation))
+        self._m_reloads = m.counter(
+            "forecast_reloads_total",
+            "manifest hot-swaps by outcome (swapped/stale/error)",
+            ("outcome",))
 
     def metrics_text(self) -> str:
         """Prometheus text exposition of the server registry (the body the
@@ -323,19 +413,45 @@ class ForecastServer:
         applies each station's training z-norm to the incoming look-back and
         rescales the forecast back (``y * sd + mu``). Requests routed by
         explicit ``cluster=`` stay in normalized units (no station, no
-        stats)."""
-        from repro.core.tasks import ROUTING_MANIFEST
+        stats).
 
-        with open(os.path.join(ckpt_root, ROUTING_MANIFEST)) as f:
-            manifest = json.load(f)
+        The manifest read is GENERATIONAL (``tasks.read_routing_manifest``:
+        latest complete generation wins) and the restore source is recorded,
+        so :meth:`reload` / :meth:`watch_manifest` can later hot-swap the
+        server to a newer generation with the same policy/step/quantization
+        settings."""
+        from repro.core.tasks import read_routing_manifest
+
+        generation, manifest = read_routing_manifest(ckpt_root)
+        if denormalize and "norm" not in manifest:
+            raise ValueError(
+                "denormalize=True but the manifest has no 'norm' stats — "
+                "re-run run_experiment(checkpoint_dir=...) to record "
+                "per-station normalization")
+        policy, models, sources = cls._restore_generation(
+            ckpt_root, manifest, policy, step, comm_bits)
         if denormalize:
-            if "norm" not in manifest:
-                raise ValueError(
-                    "denormalize=True but the manifest has no 'norm' stats — "
-                    "re-run run_experiment(checkpoint_dir=...) to record "
-                    "per-station normalization")
             kw["station_norm"] = (manifest["norm"]["mu"],
                                   manifest["norm"]["sd"])
+        server = cls(models=models,
+                     station_cluster=manifest["station_cluster"],
+                     generation=generation, **kw)
+        server._gen.sources = sources
+        server._manifest_source = dict(root=ckpt_root, policy=policy,
+                                       step=step, comm_bits=comm_bits,
+                                       denormalize=denormalize)
+        return server
+
+    @staticmethod
+    def _restore_generation(ckpt_root: str, manifest: dict,
+                            policy: Optional[str], step: Optional[int],
+                            comm_bits: int,
+                            reuse: Optional[Dict] = None):
+        """Resolve the policy and restore its cluster checkpoints. With
+        ``reuse`` (cluster -> (subdir, engine) of the LIVE generation),
+        clusters whose checkpoint subdir is unchanged keep their existing
+        engine object — a per-cluster retrain restores only the retrained
+        cluster. Returns ``(policy, models_or_engines, sources)``."""
         policies = manifest["policies"]
         if policy is None:
             if len(policies) != 1:
@@ -345,14 +461,121 @@ class ForecastServer:
         if policy not in policies:
             raise KeyError(f"unknown policy {policy!r}; "
                            f"manifest has {sorted(policies)}")
-        models = {}
+        out, sources = {}, {}
         for label, sub in sorted(policies[policy].items(),
                                  key=lambda kv: int(kv[0])):
+            c = int(label)
+            sources[c] = sub
+            if reuse is not None and reuse.get(c, (None,))[0] == sub:
+                out[c] = reuse[c][1]   # unchanged checkpoint: keep the engine
+                continue
             fc, params, _ = load_forecaster(os.path.join(ckpt_root, sub),
                                             step=step, comm_bits=comm_bits)
-            models[int(label)] = (fc, params)
-        return cls(models=models,
-                   station_cluster=manifest["station_cluster"], **kw)
+            out[c] = (fc, params)
+        return policy, out, sources
+
+    # --- manifest hot-swap ------------------------------------------------
+    def reload(self, warm_channels: Sequence[int] = (1,)) -> bool:
+        """Hot-swap to the manifest's LATEST COMPLETE GENERATION without
+        dropping a single request. Returns True if a newer generation was
+        published, False if the on-disk manifest is at (or behind) the
+        active generation.
+
+        The expensive work happens OFF the serving path: clusters whose
+        checkpoint subdir changed are restored from disk (clusters with an
+        unchanged subdir REUSE the live engine object — a per-cluster
+        retrain reloads exactly one model) and every fresh engine's shape
+        buckets are warmed against the NEW snapshot. Only then does the swap
+        happen, as one atomic attribute store. Requests already queued carry
+        their old snapshot and drain through the old engines; requests
+        admitted after the store route through the new table and engines.
+        Nothing in between is observable."""
+        src = self._manifest_source
+        if src is None:
+            raise RuntimeError(
+                "reload() needs a manifest-backed server "
+                "(ForecastServer.from_manifest)")
+        from repro.core.tasks import read_routing_manifest
+
+        with self._reload_lock:
+            generation, manifest = read_routing_manifest(src["root"])
+            if generation <= self._gen.generation:
+                if self.metrics is not None:
+                    self._m_reloads.labels("stale").inc()
+                return False
+            try:
+                old = self._gen
+                reuse = {c: (old.sources.get(c), e)
+                         for c, e in old.engines.items()}
+                _, restored, sources = self._restore_generation(
+                    src["root"], manifest, src["policy"], src["step"],
+                    src["comm_bits"], reuse=reuse)
+                engines = {
+                    c: (v if isinstance(v, _ClusterEngine)
+                        else _ClusterEngine(v[0], v[1], self._shardings))
+                    for c, v in restored.items()}
+                station_norm = None
+                if src["denormalize"]:
+                    station_norm = (manifest["norm"]["mu"],
+                                    manifest["norm"]["sd"])
+                new_gen = _Generation(
+                    generation, engines,
+                    station_cluster=manifest["station_cluster"],
+                    station_norm=station_norm, sources=sources)
+                fresh = [c for c, e in engines.items()
+                         if e is not old.engines.get(c)]
+                for ch in warm_channels:
+                    for c in fresh:
+                        L = engines[c].forecaster.cfg.look_back
+                        for b in self.buckets:
+                            self._run_bucket(
+                                np.zeros((b, ch, L), np.float32), c, new_gen)
+            except Exception:
+                if self.metrics is not None:
+                    self._m_reloads.labels("error").inc()
+                raise
+            self._gen = new_gen   # THE swap: one atomic attribute store
+            self.stats["reloads"] += 1
+            if self.metrics is not None:
+                self._m_reloads.labels("swapped").inc()
+        return True
+
+    def watch_manifest(self, interval_s: float = 2.0):
+        """Background poller: every ``interval_s`` seconds, :meth:`reload`
+        if the manifest's generation moved past the active one. The manifest
+        writer publishes atomically (snapshot file + ``os.replace``), so the
+        poller can never read a torn manifest; transient filesystem/restore
+        errors are tallied (``forecast_reloads_total{outcome="error"}``) and
+        retried next tick. Idempotent; stopped by :meth:`unwatch` or
+        :meth:`close`."""
+        if self._manifest_source is None:
+            raise RuntimeError(
+                "watch_manifest() needs a manifest-backed server "
+                "(ForecastServer.from_manifest)")
+        if self._watch_thread is not None:
+            return self._watch_thread
+        self._watch_stop = threading.Event()
+
+        def _poll():
+            while not self._watch_stop.wait(interval_s):
+                try:
+                    self.reload()
+                except Exception:
+                    pass  # already tallied as outcome="error"; retry next tick
+
+        self._watch_thread = threading.Thread(
+            target=_poll, daemon=True, name="manifest-watch")
+        self._watch_thread.start()
+        return self._watch_thread
+
+    def unwatch(self):
+        """Stop the :meth:`watch_manifest` poller (no-op when not running)."""
+        if self._watch_thread is None:
+            return
+        self._watch_stop.set()
+        self._watch_thread.join()
+        self._watch_thread = None
+        self._watch_stop = None
 
     # --- routing ----------------------------------------------------------
     @property
@@ -369,43 +592,55 @@ class ForecastServer:
         """Explicit ``cluster`` wins; else ``station`` routes through the
         manifest's ``station_cluster`` table; else the single-model default.
         Raises for unroutable requests (unknown station / cluster without a
-        checkpoint / routed server with neither key)."""
+        checkpoint / routed server with neither key). Always answers from the
+        CURRENT generation snapshot."""
+        return self._resolve(self._gen, station=station, cluster=cluster)
+
+    @staticmethod
+    def _resolve(gen: "_Generation", station=None, cluster=None):
+        """Route within ONE generation snapshot — a request reads its
+        snapshot exactly once, so a concurrent hot swap can never half-route
+        it (table from one generation, engine from another)."""
         if cluster is None and station is not None:
-            if self.station_cluster is None:
-                if self._default is not _NO_DEFAULT:  # single model: no ambiguity
-                    return self._default
+            if gen.station_cluster is None:
+                if gen.default is not _NO_DEFAULT:  # single model: no ambiguity
+                    return gen.default
                 raise ValueError(
                     "no routing table: build the server with from_manifest "
                     "(or station_cluster=) to route by station")
             s = int(station)
-            if not 0 <= s < len(self.station_cluster):
+            if not 0 <= s < len(gen.station_cluster):
                 raise KeyError(f"unknown station {s}: manifest covers "
-                               f"{len(self.station_cluster)} stations")
-            cluster = self.station_cluster[s]
-        if cluster is None and None not in self.engines:
-            if self._default is _NO_DEFAULT:
+                               f"{len(gen.station_cluster)} stations")
+            cluster = gen.station_cluster[s]
+        if cluster is None and None not in gen.engines:
+            if gen.default is _NO_DEFAULT:
                 raise ValueError(
                     "multi-cluster server: pass station= or cluster= "
-                    f"(have {sorted(self.engines, key=str)})")
-            cluster = self._default
-        if cluster not in self.engines:
+                    f"(have {sorted(gen.engines, key=str)})")
+            cluster = gen.default
+        if cluster not in gen.engines:
             raise KeyError(f"no checkpoint for cluster {cluster!r} "
-                           f"(have {sorted(self.engines, key=str)})")
+                           f"(have {sorted(gen.engines, key=str)})")
         return cluster
 
-    def _norm_for(self, station):
+    @staticmethod
+    def _norm_for_gen(gen: "_Generation", station):
         """The (mu, sd) pair a station-routed RAW request is rescaled with,
         or None when raw serving is off / the request has no station. Called
-        after ``resolve_cluster``, which already rejects unknown stations
+        after ``_resolve``, which already rejects unknown stations
         (``station_cluster`` and the stats tables cover the same fleet)."""
-        if self.station_norm is None or station is None:
+        if gen.station_norm is None or station is None:
             return None
-        mu, sd = self.station_norm
+        mu, sd = gen.station_norm
         s = int(station)
         if not 0 <= s < len(mu):
             raise KeyError(f"no normalization stats for station {s}: "
                            f"manifest covers {len(mu)} stations")
         return float(mu[s]), float(sd[s])
+
+    def _norm_for(self, station):
+        return self._norm_for_gen(self._gen, station)
 
     def routable_stations(self):
         """Stations the routing table maps to a RESTORED engine (clusters
@@ -422,20 +657,24 @@ class ForecastServer:
                 return b
         return self.buckets[-1]
 
-    def _run_bucket(self, x: np.ndarray, cluster=None) -> np.ndarray:
+    def _run_bucket(self, x: np.ndarray, cluster=None,
+                    gen: Optional["_Generation"] = None) -> np.ndarray:
         """x: (b, M, L) with b <= max_batch. Pads to the bucket, runs the
-        cluster engine's donated-output step, unpads."""
+        cluster engine's donated-output step, unpads. ``gen`` pins the
+        generation the request was admitted under (queued requests drain
+        through THEIR engines even after a swap); default is the current."""
+        gen = gen or self._gen
         b, M, L = x.shape
-        cluster = self.resolve_cluster(cluster=cluster)
+        cluster = self._resolve(gen, cluster=cluster)
         bucket = self.bucket_for(b)
         if b < bucket:
             x = np.concatenate(
                 [x, np.zeros((bucket - b, M, L), np.float32)], axis=0)
-        result = self.engines[cluster].run_padded(x, b)
+        result = gen.engines[cluster].run_padded(x, b)
         self.stats["batches"] += 1
         self.stats["padded_slots"] += bucket - b
         self.stats["series_served"] += b * M
-        self.cluster_stats[cluster]["series_served"] += b * M
+        self._cluster_stats(cluster)["series_served"] += b * M
         if self.metrics is not None:
             lbl = (str(cluster), f"{M}x{L}")
             self._m_batches.labels(*lbl).inc()
@@ -452,31 +691,40 @@ class ForecastServer:
         An explicit ``cluster=`` wins the route AND keeps the request in
         normalized units — station stats apply only to station-routed
         requests."""
+        return self._predict(self._gen, x, station=station, cluster=cluster)
+
+    def _predict(self, gen: "_Generation", x, station=None,
+                 cluster=None) -> np.ndarray:
         if cluster is not None:
             station = None  # explicit cluster: no station routing, no rescale
-        cluster = self.resolve_cluster(station=station, cluster=cluster)
-        norm = self._norm_for(station)
+        cluster = self._resolve(gen, station=station, cluster=cluster)
+        norm = self._norm_for_gen(gen, station)
         if norm is not None:
             mu, sd = norm
-            y = self.predict((np.asarray(x, np.float32) - mu) / sd,
-                             cluster=cluster)
+            y = self._predict(gen, (np.asarray(x, np.float32) - mu) / sd,
+                              cluster=cluster)
             return y * sd + mu
         x = np.asarray(x, np.float32)
         if x.ndim == 2:  # single request (M, L)
-            return self.predict(x[None], cluster=cluster)[0]
-        look_back = self.engines[cluster].forecaster.cfg.look_back
+            return self._predict(gen, x[None], cluster=cluster)[0]
+        look_back = gen.engines[cluster].forecaster.cfg.look_back
         assert x.ndim == 3 and x.shape[-1] == look_back, x.shape
-        outs = [self._run_bucket(x[i : i + self.max_batch], cluster)
+        outs = [self._run_bucket(x[i : i + self.max_batch], cluster, gen)
                 for i in range(0, x.shape[0], self.max_batch)]
         return outs[0] if len(outs) == 1 else np.concatenate(outs, axis=0)
 
-    def warmup(self, channels: int = 1, buckets: Optional[Sequence[int]] = None):
+    def warmup(self, channels: int = 1, buckets: Optional[Sequence[int]] = None,
+               gen: Optional["_Generation"] = None):
         """Pre-compile the step for each bucket of EVERY cluster engine
-        (compilation off the serving path)."""
-        for c, eng in self.engines.items():
+        (compilation off the serving path). ``reload`` passes the NEW
+        generation here before publishing it, so a hot swap never pays a
+        compile/first-dispatch on the serving path either."""
+        gen = gen or self._gen
+        for c, eng in gen.engines.items():
             L = eng.forecaster.cfg.look_back
             for b in buckets or self.buckets:
-                self._run_bucket(np.zeros((b, channels, L), np.float32), c)
+                self._run_bucket(np.zeros((b, channels, L), np.float32), c,
+                                 gen)
 
     # --- micro-batching request queue -------------------------------------
     def start(self):
@@ -503,16 +751,17 @@ class ForecastServer:
         have been coalesced into is unaffected.
         """
         fut: Future = Future()
+        gen = self._gen  # ONE snapshot read: route, norm and serve cohere
         try:
             if cluster is not None:
                 station = None  # explicit cluster: no station stats
-            cluster = self.resolve_cluster(station=station, cluster=cluster)
-            L = self.engines[cluster].forecaster.cfg.look_back
+            cluster = self._resolve(gen, station=station, cluster=cluster)
+            L = gen.engines[cluster].forecaster.cfg.look_back
             x = np.asarray(x, np.float32)
             if x.ndim != 2 or x.shape[1] != L:
                 raise ValueError(
                     f"request must be (M, look_back={L}), got {x.shape}")
-            norm = self._norm_for(station)
+            norm = self._norm_for_gen(gen, station)
             if norm is not None:
                 x = (x - norm[0]) / norm[1]
         except Exception as exc:  # incl. ragged/non-numeric asarray failures
@@ -532,7 +781,7 @@ class ForecastServer:
                     "ForecastServer is closed; request was not enqueued"))
                 return fut
             self.stats["requests"] += 1
-            self.cluster_stats[cluster]["requests"] += 1
+            self._cluster_stats(cluster)["requests"] += 1
             if self.metrics is not None:
                 self._m_requests.labels(str(cluster)).inc()
                 lat = self._m_latency.labels(str(cluster))
@@ -540,7 +789,10 @@ class ForecastServer:
                 fut.add_done_callback(
                     lambda f, lat=lat, t0=t0: lat.observe(
                         time.perf_counter() - t0))
-            self._queue.put((cluster, x, fut))
+            # the queue item CARRIES its generation: a hot swap between
+            # enqueue and dispatch must serve this request with the engines
+            # it was admitted under (old generations drain, never drop)
+            self._queue.put((gen, cluster, x, fut))
         if norm is None:
             return fut
         mu, sd = norm
@@ -580,6 +832,7 @@ class ForecastServer:
             if self._closed:
                 return
             self._closed = True
+        self.unwatch()
         self.stop()
         # the worker is gone and _closed bars new enqueues, so whatever is
         # left in the queue would hang its waiters forever — fail them all
@@ -590,23 +843,25 @@ class ForecastServer:
                 break
             if item is _STOP:
                 continue
-            _safe_set(item[2], exc=RuntimeError(
+            _safe_set(item[3], exc=RuntimeError(
                 "ForecastServer closed before this request was served"))
 
-    def _run_group(self, cluster, items):
-        """Serve one coalesced (cluster, shape) group; a failure propagates
-        to THIS group's waiters only. Futures are resolved through
-        ``_safe_set`` so a waiter that cancelled (gateway deadline) can't
-        blow up the worker thread."""
+    def _run_group(self, items):
+        """Serve one coalesced (generation, cluster, shape) group with the
+        GENERATION THE REQUESTS WERE ADMITTED UNDER; a failure propagates to
+        THIS group's waiters only. Futures are resolved through ``_safe_set``
+        so a waiter that cancelled (gateway deadline) can't blow up the
+        worker thread."""
+        gen, cluster = items[0][0], items[0][1]
         try:
-            ys = self.predict(np.stack([x for _, x, _ in items]),
-                              cluster=cluster)
-            for (_, _, fut), y in zip(items, ys):
+            ys = self._predict(gen, np.stack([x for _, _, x, _ in items]),
+                               cluster=cluster)
+            for (_, _, _, fut), y in zip(items, ys):
                 _safe_set(fut, y)
         except Exception as exc:
             if self.metrics is not None:
                 self._m_errors.labels(str(cluster)).inc()
-            for _, _, fut in items:
+            for _, _, _, fut in items:
                 _safe_set(fut, exc=exc)
 
     def _worker(self):
@@ -626,9 +881,14 @@ class ForecastServer:
             # IMMEDIATELY while the remaining (e.g. minority-cluster) groups
             # keep coalescing until the deadline or the window cap.
             # Single-model/single-shape traffic degenerates to the seed
-            # behavior exactly: one group, dispatched at max_batch.
+            # behavior exactly: one group, dispatched at max_batch. Groups
+            # additionally split by GENERATION: a swap mid-window must not
+            # stack old- and new-generation requests into one dispatch.
+            def key_of(it):
+                return (it[0].generation, it[1], it[2].shape)
+
             groups: dict = {}
-            groups.setdefault((item[0], item[1].shape), []).append(item)
+            groups.setdefault(key_of(item), []).append(item)
             total = 1
             cap = self.max_batch * max(1, len(self.engines))
             deadline = time.perf_counter() + self.max_wait_ms / 1e3
@@ -636,7 +896,7 @@ class ForecastServer:
             while total < cap:
                 for k in [k for k, v in groups.items()
                           if len(v) >= self.max_batch]:
-                    self._run_group(k[0], groups.pop(k))
+                    self._run_group(groups.pop(k))
                 left = deadline - time.perf_counter()
                 if left <= 0:
                     break
@@ -647,10 +907,10 @@ class ForecastServer:
                 if nxt is _STOP:
                     stopping = True
                     break
-                groups.setdefault((nxt[0], nxt[1].shape), []).append(nxt)
+                groups.setdefault(key_of(nxt), []).append(nxt)
                 total += 1
-            for (c, _), items in groups.items():
-                self._run_group(c, items)
+            for items in groups.values():
+                self._run_group(items)
             if stopping:
                 return
 

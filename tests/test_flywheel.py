@@ -1,0 +1,485 @@
+"""Train→serve flywheel tests: generational manifests, atomic checkpoint
+writes, zero-drop hot-swap serving, and drift-triggered per-cluster
+retraining.
+
+  * checkpoint + manifest writes are ATOMIC (tmp + os.replace): a reader
+    interleaving with a writer never sees a torn JSON/npz, and
+    ``latest_step`` skips partial/non-step entries instead of raising;
+  * routing manifests carry a monotonic ``generation``; the reader serves
+    the latest COMPLETE generation (corrupt ``routing.json`` falls back to
+    the per-generation snapshots) and ``update_routing_manifest`` moves only
+    the retrained clusters' subdirs/norm stats;
+  * ``ForecastServer.reload`` hot-swaps to a newer generation atomically —
+    queued old-generation futures drain through the OLD engines (bitwise),
+    unchanged clusters reuse their live engine objects, stale reloads
+    no-op — and ``watch_manifest`` runs the reload from a poller;
+  * ``DriftDetector``'s trailing-quantile trigger fires per cluster, and
+    ``RetrainController.step`` retrains ONLY the drifted cluster, bumps the
+    generation, and recovers the online RMSE on the drifted data.
+"""
+import json
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, load_checkpoint, read_manifest,
+                              save_checkpoint)
+from repro.core.fl.flywheel import DriftDetector, RetrainController
+from repro.core.tasks import (ExperimentSpec, get_task, manifest_generations,
+                              read_routing_manifest, run_experiment,
+                              task_forecaster, update_routing_manifest,
+                              write_routing_manifest)
+from repro.launch.metrics import parse_exposition, sum_samples
+from repro.launch.serve_forecast import ForecastServer, stream_evaluate
+
+LOOK_BACK, HORIZON = 32, 2
+
+
+def make_spec():
+    task = get_task("ev", quick=True, clusters=2, num_clients=10,
+                    num_days=150, look_back=LOOK_BACK, horizon=HORIZON)
+    model = task_forecaster(task, "logtst", quick=True, d_model=16,
+                            num_heads=2, d_ff=32)
+    return ExperimentSpec(task=task, model=model, grid=(("psgf", {}),),
+                          local_steps=2, batch_size=16, max_rounds=2,
+                          patience=10, eval_every=2)
+
+
+@pytest.fixture(scope="module")
+def trained_root(tmp_path_factory):
+    """One generation-0 2-cluster experiment, trained once per module.
+    Tests that publish new generations work on a COPY (fresh_root)."""
+    root = str(tmp_path_factory.mktemp("flywheel_ckpts"))
+    spec = make_spec()
+    series = spec.task.series()
+    run_experiment(spec, checkpoint_dir=root, series=series)
+    return {"root": root, "spec": spec, "series": series,
+            "labels": spec.task.cluster_labels(series)}
+
+
+@pytest.fixture()
+def fresh_root(trained_root, tmp_path):
+    """A private copy of the trained experiment root: generation-bumping
+    tests can't interfere with each other."""
+    dst = str(tmp_path / "root")
+    shutil.copytree(trained_root["root"], dst)
+    return dict(trained_root, root=dst)
+
+
+# ---- atomic checkpoint writes ------------------------------------------------
+
+
+def test_checkpoint_write_is_atomic_under_interleaved_reader(tmp_path):
+    """THE torn-write regression: a reader hammering the checkpoint dir
+    while a writer saves must only ever see complete steps."""
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.arange(4096, dtype=np.float32)}
+    save_checkpoint(d, 0, tree, extra={"i": 0})
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                step = latest_step(d)
+                out, extra = load_checkpoint(d, tree, step=step)
+                # a complete step is self-consistent: payload matches extra
+                assert float(out["w"][0]) == float(extra["i"])
+            except Exception as exc:  # pragma: no cover - failure diagnostics
+                errors.append(exc)
+                return
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for i in range(1, 30):
+            save_checkpoint(d, i, {"w": np.full(4096, i, np.float32)},
+                            extra={"i": i})
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
+    assert latest_step(d) == 29
+
+
+def test_latest_step_skips_partial_and_non_numeric(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, {"w": np.zeros(2)})
+    # partially-written step: payload present, manifest not yet (the write
+    # order save_checkpoint guarantees) — must be skipped, not raised on
+    os.makedirs(os.path.join(d, "step_00000007"))
+    np.savez(os.path.join(d, "step_00000007", "arrays.npz"), w=np.zeros(2))
+    # non-step junk that used to be able to confuse/raise downstream
+    os.makedirs(os.path.join(d, "step_final"))
+    open(os.path.join(d, "step_00000009"), "w").close()  # a FILE, not a dir
+    assert latest_step(d) == 3
+    step, manifest = read_manifest(d)       # resolves the complete step
+    assert step == 3 and manifest["step"] == 3
+
+
+def test_manifest_json_write_is_atomic_under_interleaved_reader(fresh_root):
+    """Same torn-write guarantee for the routing manifest: while a writer
+    republishes generations, a reader always parses a complete manifest
+    with a monotonically growing generation."""
+    root, spec = fresh_root["root"], fresh_root["spec"]
+    stop = threading.Event()
+    seen, errors = [], []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                gen, manifest = read_routing_manifest(root)
+                assert manifest["generation"] == gen
+                assert set(manifest["policies"]) == {"psgf-s30-f20"}
+                seen.append(gen)
+            except Exception as exc:  # pragma: no cover
+                errors.append(exc)
+                return
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        rows = [{"policy": "psgf-s30-f20", "cluster": c} for c in (0, 1)]
+        for _ in range(20):
+            write_routing_manifest(root, spec.task, spec.model,
+                                   fresh_root["labels"], rows,
+                                   series=fresh_root["series"])
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
+    assert seen == sorted(seen), "reader observed a generation rollback"
+    assert read_routing_manifest(root)[0] == 20
+
+
+# ---- generational manifests --------------------------------------------------
+
+
+def test_manifest_generation_bumps_and_snapshots(fresh_root):
+    root = fresh_root["root"]
+    gen0, manifest = read_routing_manifest(root)
+    assert gen0 == 0 and manifest["generation"] == 0
+    assert manifest_generations(root) == [0]
+    rows = [{"policy": "psgf-s30-f20", "cluster": c} for c in (0, 1)]
+    spec = fresh_root["spec"]
+    write_routing_manifest(root, spec.task, spec.model,
+                           fresh_root["labels"], rows)
+    assert read_routing_manifest(root)[0] == 1
+    assert manifest_generations(root) == [0, 1]
+    # pinned read serves a specific (older) generation for rollback
+    assert read_routing_manifest(root, generation=0)[0] == 0
+
+
+def test_corrupt_routing_json_falls_back_to_snapshot(fresh_root):
+    root = fresh_root["root"]
+    with open(os.path.join(root, "routing.json"), "w") as f:
+        f.write('{"generation": 0, "torn')   # a legacy in-place torn write
+    gen, manifest = read_routing_manifest(root)
+    assert gen == 0 and manifest["policies"]
+
+
+def test_legacy_manifest_without_generation_reads_as_zero(fresh_root):
+    root = fresh_root["root"]
+    with open(os.path.join(root, "routing.json")) as f:
+        manifest = json.load(f)
+    del manifest["generation"]
+    os.unlink(os.path.join(root, "routing.g000000.json"))
+    with open(os.path.join(root, "routing.json"), "w") as f:
+        json.dump(manifest, f)
+    gen, _ = read_routing_manifest(root)
+    assert gen == 0
+    server = ForecastServer.from_manifest(root, max_batch=4)
+    assert server.generation == 0
+    server.close()
+
+
+def test_update_routing_manifest_moves_only_given_clusters(fresh_root):
+    root = fresh_root["root"]
+    _, before = read_routing_manifest(root)
+    gen, _ = update_routing_manifest(
+        root, "psgf-s30-f20", {1: "psgf-s30-f20_c1_g1"},
+        station_norm={0: (5.0, 2.0)})
+    assert gen == 1
+    _, after = read_routing_manifest(root)
+    pol = after["policies"]["psgf-s30-f20"]
+    assert pol["1"] == "psgf-s30-f20_c1_g1"
+    assert pol["0"] == before["policies"]["psgf-s30-f20"]["0"]
+    assert after["norm"]["mu"][0] == 5.0 and after["norm"]["sd"][0] == 2.0
+    assert after["norm"]["mu"][1:] == before["norm"]["mu"][1:]
+    with pytest.raises(KeyError):
+        update_routing_manifest(root, "nope", {0: "x"})
+
+
+# ---- hot-swap serving --------------------------------------------------------
+
+
+def _republish(fresh_root, clusters=(1,)):
+    """Retrain ``clusters`` directly through a controller (no server
+    attached) so a new generation lands on disk."""
+    ctl = RetrainController(fresh_root["spec"], fresh_root["root"],
+                            series=fresh_root["series"],
+                            labels=fresh_root["labels"], server=None)
+    return ctl.retrain(list(clusters))
+
+
+def test_reload_swaps_generation_and_reuses_unchanged_engines(fresh_root):
+    server = ForecastServer.from_manifest(fresh_root["root"], max_batch=4)
+    try:
+        assert server.generation == 0
+        assert server.reload() is False          # nothing newer on disk
+        old = dict(server.engines)
+        res = _republish(fresh_root, clusters=(1,))
+        assert res["generation"] == 1
+        assert server.reload() is True
+        assert server.generation == 1
+        assert server.engines[1] is not old[1], "retrained cluster rebuilt"
+        assert server.engines[0] is old[0], "unchanged cluster engine reused"
+        assert server.reload() is False          # now stale again
+        assert server.stats["reloads"] == 1
+    finally:
+        server.close()
+
+
+def test_reload_requires_manifest_backed_server(rng_key):
+    from repro.core.forecaster import get_forecaster
+
+    fc = get_forecaster("logtst", look_back=16, horizon=2, d_model=16,
+                        num_heads=2, d_ff=16, patch_len=8, stride=4)
+    server = ForecastServer(fc, fc.init_params(rng_key))
+    with pytest.raises(RuntimeError, match="from_manifest"):
+        server.reload()
+    with pytest.raises(RuntimeError, match="from_manifest"):
+        server.watch_manifest()
+    server.close()
+
+
+def test_queued_old_generation_futures_drain_through_old_engines(fresh_root):
+    """THE zero-drop guarantee: requests queued before a swap are served by
+    the engines they were admitted under — bitwise — even though the swap
+    happened while they waited."""
+    server = ForecastServer.from_manifest(fresh_root["root"], max_batch=4,
+                                          max_wait_ms=1.0)
+    try:
+        x = np.ones((1, LOOK_BACK), np.float32)
+        y_old = server.predict(x, cluster=1)     # generation-0, batch of 1
+        # generation-0 answer at the SAME batch composition the 3 queued
+        # requests will coalesce into (bucket shapes must match for bitwise)
+        y_old3 = server.predict(np.stack([x] * 3), cluster=1)
+        futs = [server.submit(x, cluster=1) for _ in range(3)]  # queued:
+        _republish(fresh_root, clusters=(1,))                   # worker not
+        assert server.reload() is True                          # started yet
+        y_new = server.predict(x, cluster=1)     # generation-1 answer
+        assert not np.array_equal(y_old, y_new), "retrain changed the model"
+        server.start()
+        for i, f in enumerate(futs):
+            assert np.array_equal(f.result(timeout=30), y_old3[i]), \
+                "old-generation future served by the wrong generation"
+        # a request submitted AFTER the swap gets the new generation
+        assert np.array_equal(server.submit(x, cluster=1).result(timeout=30),
+                              y_new)
+    finally:
+        server.close()
+
+
+def test_swap_under_concurrent_queue_traffic_drops_nothing(fresh_root):
+    """Reload while the worker is serving a sustained submit stream: every
+    future resolves successfully and every answer matches the old- or the
+    new-generation model (coalesced batch sizes vary, so the comparison is
+    allclose rather than bitwise)."""
+    server = ForecastServer.from_manifest(fresh_root["root"], max_batch=4,
+                                          max_wait_ms=0.5)
+    try:
+        server.warmup(channels=1)
+        x = np.ones((1, LOOK_BACK), np.float32)
+        y_old = server.predict(x, cluster=1)
+        _republish(fresh_root, clusters=(1,))
+        server.start()
+        futs, swapped = [], []
+        for i in range(200):
+            futs.append(server.submit(x, cluster=1))
+            if i == 50:
+                swapped.append(server.reload())
+        ys = [f.result(timeout=60) for f in futs]   # NOTHING dropped/errored
+        assert swapped == [True]
+        y_new = server.predict(x, cluster=1)
+        assert not np.allclose(y_old, y_new, rtol=1e-3), \
+            "retrain barely moved the model; generations indistinguishable"
+        n_old = sum(np.allclose(y, y_old, rtol=1e-3) for y in ys)
+        n_new = sum(np.allclose(y, y_new, rtol=1e-3) for y in ys)
+        assert n_old + n_new == len(ys), "a future got a half-swapped answer"
+        assert n_new > 0, "no request ever saw the new generation"
+    finally:
+        server.close()
+
+
+def test_watch_manifest_hot_swaps_in_background(fresh_root):
+    server = ForecastServer.from_manifest(fresh_root["root"], max_batch=4)
+    try:
+        server.watch_manifest(interval_s=0.05)
+        assert server.watch_manifest(interval_s=0.05) is not None  # idempotent
+        _republish(fresh_root, clusters=(1,))
+        deadline = time.time() + 30
+        while server.generation == 0 and time.time() < deadline:
+            time.sleep(0.02)
+        assert server.generation == 1, "watcher never picked up generation 1"
+    finally:
+        server.close()
+    assert server._watch_thread is None          # close() stops the poller
+
+
+def test_metrics_expose_generation_and_reload_outcomes(fresh_root):
+    server = ForecastServer.from_manifest(fresh_root["root"], max_batch=4)
+    try:
+        s = parse_exposition(server.metrics_text())
+        assert sum_samples(s, "forecast_generation") == 0
+        server.reload()                          # stale
+        _republish(fresh_root, clusters=(1,))
+        server.reload()                          # swapped
+        s = parse_exposition(server.metrics_text())
+        assert sum_samples(s, "forecast_generation") == 1
+        assert sum_samples(s, "forecast_reloads_total", outcome="swapped") == 1
+        assert sum_samples(s, "forecast_reloads_total", outcome="stale") == 1
+    finally:
+        server.close()
+
+
+# ---- drift detector ----------------------------------------------------------
+
+
+def test_drift_detector_trailing_quantile_trigger():
+    det = DriftDetector(window=8, quantile=0.9, tolerance=1.2, min_obs=3)
+    for r in (1.0, 1.05, 0.95):
+        det.record(0, r)
+    assert not det.drifted(0)                    # stable baseline
+    det.record(0, 1.02)
+    assert not det.drifted(0)
+    det.record(0, 2.0)                           # the drift step
+    assert det.drifted(0) and det.drifted_clusters() == [0]
+    thr = det.threshold(0)
+    assert thr is not None and 1.2 <= thr < 2.0
+    det.reset(0)
+    assert not det.drifted(0) and det.threshold(0) is None
+
+
+def test_drift_detector_needs_baseline_and_ignores_nan():
+    det = DriftDetector(min_obs=3)
+    det.record(1, 1.0)
+    det.record(1, 100.0)                         # huge, but baseline too thin
+    assert not det.drifted(1)
+    det.record(2, float("nan"))                  # empty replay: not recorded
+    assert det.threshold(2) is None
+    with pytest.raises(ValueError):
+        DriftDetector(quantile=1.5)
+    with pytest.raises(ValueError):
+        DriftDetector(window=1)
+
+
+# ---- the closed loop ---------------------------------------------------------
+
+
+def _inject_drift(series, labels, cluster, t_new=40, scale=3.0, offset=5.0):
+    """New columns where only ``cluster``'s stations step-change."""
+    tail = series[:, -t_new:].copy()
+    rows = labels == cluster
+    tail[rows] = tail[rows] * scale + offset
+    return tail
+
+
+def test_step_retrains_only_the_drifted_cluster(fresh_root):
+    spec, root = fresh_root["spec"], fresh_root["root"]
+    server = ForecastServer.from_manifest(root, max_batch=8, max_wait_ms=1.0)
+    ctl = RetrainController(
+        spec, root, series=fresh_root["series"].copy(),
+        labels=fresh_root["labels"], server=server,
+        detector=DriftDetector(min_obs=2, tolerance=1.05))
+    try:
+        rep = stream_evaluate(server, spec.task, series=ctl.series,
+                              max_windows=2)
+        for _ in range(3):
+            assert ctl.step(rep)["retrained"] == {}  # stable: no trigger
+        ctl.append_windows(_inject_drift(ctl.series, ctl.labels, cluster=1))
+        drifted_rep = stream_evaluate(server, spec.task, series=ctl.series,
+                                      max_windows=2)
+        rmse_drifted = drifted_rep["per_cluster"][1]["rmse"]
+        out = ctl.step(drifted_rep)
+        assert out["drifted"] == [1], "only the drifted cluster triggers"
+        assert sorted(out["retrained"]) == [1]
+        assert out["generation"] == 1 and server.generation == 1
+        # norm stats moved ONLY for the retrained cluster's stations
+        _, manifest = read_routing_manifest(root)
+        mu = np.asarray(manifest["norm"]["mu"])
+        mu0 = np.asarray(
+            read_routing_manifest(root, generation=0)[1]["norm"]["mu"])
+        moved = mu != mu0
+        assert moved[ctl.labels == 1].all() and not moved[ctl.labels == 0].any()
+        # the retrained model recovers the online RMSE on the drifted data
+        recovered = stream_evaluate(server, spec.task, series=ctl.series,
+                                    max_windows=2)
+        assert recovered["per_cluster"][1]["rmse"] < rmse_drifted
+    finally:
+        server.close()
+
+
+def test_retrain_validates_inputs(fresh_root):
+    ctl = RetrainController(fresh_root["spec"], fresh_root["root"],
+                            series=fresh_root["series"],
+                            labels=fresh_root["labels"])
+    with pytest.raises(ValueError, match="no clusters"):
+        ctl.retrain([])
+    with pytest.raises(ValueError, match="new observations"):
+        ctl.append_windows(np.zeros(7))
+    with pytest.raises(ValueError, match="new observations"):
+        ctl.append_windows(np.zeros((3, 5)))
+    with pytest.raises(KeyError, match="not in the spec grid"):
+        RetrainController(fresh_root["spec"], fresh_root["root"],
+                          series=fresh_root["series"],
+                          labels=fresh_root["labels"], policy="online")
+
+
+def test_init_fl_state_warm_starts_from_given_params(fresh_root):
+    """``run_fl(init_params=...)`` — the flywheel's fine-tune path — seeds
+    the global AND per-client vectors from the given pytree instead of a
+    fresh init; Adam moments still start at zero."""
+    import jax
+
+    from repro.common.pytree_utils import tree_flatten_to_vector
+    from repro.core import forecast
+    from repro.core.fl.engine import FLConfig, init_fl_state
+
+    cfg = fresh_root["spec"].model.cfg
+    params = forecast.init_params(cfg, jax.random.PRNGKey(123))
+    vec = np.asarray(tree_flatten_to_vector(params)[0])
+    fl_cfg = FLConfig(num_clients=3)
+    key = jax.random.PRNGKey(0)
+    warm, _ = init_fl_state(cfg, fl_cfg, key, init_params=params)
+    fresh, _ = init_fl_state(cfg, fl_cfg, key)
+    np.testing.assert_array_equal(np.asarray(warm["w_global"]), vec)
+    for k in range(3):
+        np.testing.assert_array_equal(np.asarray(warm["w_clients"][k]), vec)
+    assert not np.array_equal(np.asarray(fresh["w_global"]), vec)
+    assert float(np.abs(np.asarray(warm["adam_m"])).max()) == 0.0
+    assert float(np.abs(np.asarray(warm["adam_v"])).max()) == 0.0
+
+
+def test_timer_trigger_periodically_republishes(fresh_root):
+    ctl = RetrainController(fresh_root["spec"], fresh_root["root"],
+                            series=fresh_root["series"].copy(),
+                            labels=fresh_root["labels"])
+    ctl.start_timer(0.05, clusters=[0])
+    assert ctl.start_timer(0.05) is not None     # idempotent
+    try:
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            if read_routing_manifest(fresh_root["root"])[0] >= 1:
+                break
+            time.sleep(0.05)
+    finally:
+        ctl.stop_timer()
+    gen, manifest = read_routing_manifest(fresh_root["root"])
+    assert gen >= 1
+    assert manifest["policies"]["psgf-s30-f20"]["0"].endswith(f"_g{gen}")
+    assert ctl._timer is None

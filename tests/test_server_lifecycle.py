@@ -2,13 +2,15 @@
 
   * ``close()`` fails every still-pending future with RuntimeError instead
     of leaving waiters hanging forever (a blocked ``.result(timeout=...)``
-    raises PROMPTLY), and submits after close fail the same way;
+    raises PROMPTLY), and submits after close fail the same way — including
+    a burst of concurrent ``submit()`` threads racing close() itself;
   * worker-side future resolution survives waiters that were cancelled
     (gateway deadlines) — no InvalidStateError killing the worker thread;
   * ``stream_evaluate``'s per-request timeout skips-and-counts stuck
     futures rather than stalling the whole replay;
   * the serving metrics the worker records reconcile with the traffic.
 """
+import threading
 import time
 from concurrent.futures import Future
 from concurrent.futures import TimeoutError as FutTimeout
@@ -90,6 +92,51 @@ def test_close_after_serving_traffic(rng_key):
     server.close()
     with pytest.raises(RuntimeError):
         straggler.result(timeout=5)
+
+
+def test_close_racing_submit_burst_never_deadlocks(rng_key):
+    """close() in the MIDDLE of a multi-thread submit burst: the lifecycle
+    gate makes closed-check + enqueue atomic, so every single future either
+    resolves with a forecast (admitted and served before the drain) or fails
+    promptly with the closed-server RuntimeError — none hang, and the whole
+    race settles in bounded time."""
+    server = _server(rng_key, max_wait_ms=0.5)
+    server.warmup(channels=1)
+    server.start()
+    x = np.ones((1, 16), np.float32)
+    n_threads, per_thread = 8, 100
+    futs = [[] for _ in range(n_threads)]
+    go = threading.Barrier(n_threads + 1)
+
+    def pump(i):
+        go.wait()
+        for _ in range(per_thread):
+            futs[i].append(server.submit(x))
+
+    threads = [threading.Thread(target=pump, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    go.wait()                      # all pumps released...
+    time.sleep(0.002)              # ...mid-burst:
+    t0 = time.perf_counter()
+    server.close()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "a submitter deadlocked against close()"
+    served = failed = 0
+    for f in [f for fs in futs for f in fs]:
+        try:
+            y = f.result(timeout=5)  # prompt: resolved or failed already
+        except RuntimeError:
+            failed += 1              # straggler: failed, not hung
+        else:
+            served += 1
+            assert y.shape == (1, 2)
+    elapsed = time.perf_counter() - t0
+    assert served + failed == n_threads * per_thread, "a future was dropped"
+    assert failed > 0, "close() landed after the burst; race not exercised"
+    assert elapsed < 30, "stragglers were not failed promptly"
 
 
 # ---- cancelled-waiter robustness -------------------------------------------
