@@ -10,10 +10,21 @@ import numpy as np
 EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 
 
-def save_json(subdir: str, name: str, payload: dict):
+def save_json(subdir: str, name: str, payload: dict,
+              keep_existing: bool = False):
+    """Write ``payload`` to experiments/<subdir>/<name>.json.
+
+    ``keep_existing=True`` carries over top-level sections already committed
+    in the file that this run did not produce (e.g. a ``--quick`` rerun must
+    not drop the full-mode ``scaling``/``host_store`` sections)."""
     d = os.path.join(EXP_DIR, subdir)
     os.makedirs(d, exist_ok=True)
     path = os.path.join(d, name + ".json")
+    if keep_existing and os.path.exists(path):
+        with open(path) as f:
+            prior = json.load(f)
+        for key, val in prior.items():
+            payload.setdefault(key, val)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     return path

@@ -19,7 +19,11 @@ the paper's FL experiments use), checkpoints them, RESTORES them via
     CPU models some per-step fixed cost lands twice per window (~0.8x here;
     converges toward 1.0 as per-step compute grows);
   * ``stream_eval``  — per-cluster ONLINE RMSE from replaying held-out
-    windows through the routed queue (``stream_evaluate``).
+    windows through the routed queue (``stream_evaluate``);
+  * ``restore_ab``   — wire-format restore A/B (fp32 / bf16 / int8+scale
+    payload bytes + max forecast deviation vs fp32) and the flash-restore
+    agreement row (``use_flash_attn=True`` within ``FLASH_ATTN_TOL`` of the
+    dense route on the same restored params).
 
 ``env`` records device kind, device count, mesh shape and serving dtype so
 throughput numbers stay comparable across PRs and hardware.
@@ -52,7 +56,8 @@ def env_info(comm_bits: int = 32, shard_batch: bool = False) -> dict:
     return record_env(
         mesh_shape=({"batch": len(devs)}
                     if shard_batch and len(devs) > 1 else None),
-        serving_dtype="bfloat16-restore" if comm_bits == 16 else "float32",
+        serving_dtype={8: "int8-scale-restore", 16: "bfloat16-restore"}
+            .get(comm_bits, "float32"),
     )
 
 
@@ -113,6 +118,63 @@ def bench_ragged_direct(server: ForecastServer, channels: int, seed: int = 0,
             "batches": server.stats["batches"] - base["batches"]}
 
 
+def bench_restore_ab(ckpt: str) -> dict:
+    """Wire-format restore A/B on ONE checkpoint — the serving-side mirror of
+    the fl_rounds ``comm_bits`` section: restore the same trained params at
+    fp32 / bf16 / int8+per-leaf-scale, record each width's wire payload bytes
+    (int8 ships one fp32 scale per param leaf on top of the int8 ints) and
+    the max forecast deviation vs the fp32 restore on a fixed batch.
+
+    Plus the flash-restore agreement row: the SAME fp32 params served through
+    ``use_flash_attn=True`` must forecast within ``forecast.FLASH_ATTN_TOL``
+    of the dense route — trained-dense / served-flash deployments agree."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core import forecast as F
+    from repro.core.forecaster import Forecaster
+
+    fc32, p32, _ = load_forecaster(ckpt, comm_bits=32)
+    leaves = jax.tree_util.tree_leaves(p32)
+    D = sum(int(l.size) for l in leaves)
+    n_leaves = len(leaves)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(
+        (16, 3, fc32.cfg.look_back)).astype(np.float32))
+    ref = np.asarray(fc32.forward_multivariate(p32, x))
+
+    out = {"num_params": D, "num_leaves": n_leaves}
+    for bits in (32, 16, 8):
+        fc, p, _ = load_forecaster(ckpt, comm_bits=bits)
+        pred = np.asarray(fc.forward_multivariate(p, x))
+        row = {
+            "comm_bits": bits,
+            "payload_bytes": D * bits / 8.0 + (n_leaves * 4.0 if bits == 8
+                                               else 0.0),
+            "max_abs_forecast_delta_vs_fp32": float(np.max(np.abs(pred - ref))),
+        }
+        out[f"bits{bits}"] = row
+        print(f"serve_forecast,restore_ab,{bits}b,"
+              f"bytes={row['payload_bytes']:.3e},"
+              f"delta={row['max_abs_forecast_delta_vs_fp32']:.2e}", flush=True)
+    out["bytes_ratio_int8_over_bf16"] = (out["bits8"]["payload_bytes"]
+                                         / out["bits16"]["payload_bytes"])
+
+    flash_fc = Forecaster(dataclasses.replace(fc32.cfg, use_flash_attn=True))
+    delta = float(np.max(np.abs(
+        np.asarray(flash_fc.forward_multivariate(p32, x)) - ref)))
+    out["flash_restore"] = {"tol": F.FLASH_ATTN_TOL,
+                            "max_abs_forecast_delta_vs_dense": delta,
+                            "within_tol": delta <= F.FLASH_ATTN_TOL}
+    print(f"serve_forecast,restore_ab,flash,delta={delta:.2e},"
+          f"tol={F.FLASH_ATTN_TOL:.0e}", flush=True)
+    assert out["flash_restore"]["within_tol"], (
+        f"flash restore diverged from the dense route: {delta:.2e} > "
+        f"{F.FLASH_ATTN_TOL:.0e}")
+    return out
+
+
 def run(quick: bool = True, comm_bits: int = 32, shard_batch: bool = False):
     """``comm_bits``/``shard_batch`` apply to EVERY serving section and are
     recorded in ``env`` so the results stay self-describing."""
@@ -124,6 +186,7 @@ def run(quick: bool = True, comm_bits: int = 32, shard_batch: bool = False):
         results["checkpoint"] = {"model": fc.name,
                                  "num_params": fc.num_params(),
                                  "train_rmse": extra["final_rmse"]}
+        results["restore_ab"] = bench_restore_ab(ckpt)
         server = ForecastServer(fc, params, max_batch=max_batch,
                                 shard_batch=shard_batch)
         results["direct"] = bench_ragged_direct(
@@ -169,7 +232,7 @@ def run(quick: bool = True, comm_bits: int = 32, shard_batch: bool = False):
               f"online_rmse={results['stream_eval']['overall_rmse']:.4f},"
               f"{per}", flush=True)
 
-    save_json("serve_forecast", "results", results)
+    save_json("serve_forecast", "results", results, keep_existing=True)
     return results
 
 
@@ -177,8 +240,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: tiny train run + fewer requests")
-    ap.add_argument("--comm-bits", type=int, default=32, choices=(16, 32),
-                    help="16 = bf16-quantized checkpoint restore")
+    ap.add_argument("--comm-bits", type=int, default=32, choices=(8, 16, 32),
+                    help="16 = bf16, 8 = int8+scale quantized restore")
     ap.add_argument("--shard-batch", action="store_true",
                     help="shard bucket batch axes over local devices")
     args = ap.parse_args()

@@ -35,8 +35,8 @@ def main():
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--clusters", type=int, default=2)
-    ap.add_argument("--comm-bits", type=int, default=32, choices=(16, 32),
-                    help="16 = bf16-quantized checkpoint restore")
+    ap.add_argument("--comm-bits", type=int, default=32, choices=(8, 16, 32),
+                    help="16 = bf16, 8 = int8+scale quantized restore")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: fewer rounds/requests/replay windows")
     ap.add_argument("--ckpt-dir", default=None,

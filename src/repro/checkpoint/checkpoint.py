@@ -81,24 +81,54 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -
     return step_dir
 
 
-def quantize_tree(tree, bits: int = 32):
+def quantize_tree(tree, bits: int = 32, *, where: str = "quantize_tree",
+                  key=None):
     """Wire-format payload quantization, mirroring ``FLConfig.comm_bits`` on
     the inference side: ``bits=16`` round-trips every float leaf through
-    bfloat16 (what a bf16 wire payload reconstructs to), ``bits=32`` is the
-    identity. Integer/bool leaves pass through untouched either way.
+    bfloat16 (what a bf16 wire payload reconstructs to), ``bits=8``
+    round-trips every float leaf through int8 with a per-leaf fp32 scale
+    (symmetric absmax: ``scale = max|leaf| / 127``, values clipped-rounded to
+    [-127, 127] and dequantized as ``int8 * scale`` — what an int8+scale wire
+    payload reconstructs to), and ``bits=32`` is the identity. Integer/bool
+    leaves pass through untouched at every width. ``where`` names the call
+    site in the unsupported-width error so a bad ``--comm-bits`` surfaces
+    with the API that received it rather than a bare deep-restore failure.
+
+    ``key`` (int8 only) switches round-to-nearest to STOCHASTIC rounding
+    (``floor(x/scale + U[0,1))``, folded per leaf off ``key``) — the unbiased
+    quantizer the training wire path needs: nearest-rounding is biased, so a
+    model trained through it stalls once per-round updates drop below half a
+    quantization step. Restore paths (checkpoints) stay deterministic with
+    ``key=None``: serving must reconstruct the same params every time.
     """
     if bits == 32:
         return tree
-    if bits != 16:
-        raise ValueError(f"unsupported payload width: {bits} bits (16 or 32)")
+    if bits not in (8, 16):
+        raise ValueError(
+            f"{where}: unsupported payload width: {bits} bits "
+            f"(choose 8, 16 or 32)")
 
-    def q(leaf):
+    def q(i, leaf):
         leaf = jnp.asarray(leaf)
         if not jnp.issubdtype(leaf.dtype, jnp.floating):
             return leaf
-        return leaf.astype(jnp.bfloat16).astype(leaf.dtype)
+        if bits == 16:
+            return leaf.astype(jnp.bfloat16).astype(leaf.dtype)
+        f = leaf.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(f)) / 127.0
+        # all-zero leaves (e.g. fresh biases): keep scale finite, payload 0
+        safe = jnp.where(scale > 0, scale, 1.0)
+        if key is None:
+            q_f = jnp.round(f / safe)
+        else:
+            u = jax.random.uniform(jax.random.fold_in(key, i), f.shape)
+            q_f = jnp.floor(f / safe + u)
+        ints = jnp.clip(q_f, -127, 127).astype(jnp.int8)
+        return (ints.astype(jnp.float32) * safe).astype(leaf.dtype)
 
-    return jax.tree_util.tree_map(q, tree)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [q(i, l) for i, l in enumerate(leaves)])
 
 
 def load_checkpoint(ckpt_dir: str, template, step: int | None = None):

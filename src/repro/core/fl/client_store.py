@@ -200,6 +200,11 @@ def run_fl_host(model_cfg, fl_cfg, train_data, test_data, key, *,
         "comm_down": jnp.zeros((), E.ACCOUNTING_DTYPE),
         "comm_up": jnp.zeros((), E.ACCOUNTING_DTYPE),
     }
+    if fl_cfg.comm_bits == 8:
+        # int8 wire: the scale-header counter rides with the server state
+        # (mirrors engine.init_fl_state — added only at 8 bits so existing
+        # configs keep their carry structure)
+        server["comm_scales"] = jnp.zeros((), E.ACCOUNTING_DTYPE)
     full_cohort = np.arange(K)
 
     history = {"round": [], "train_loss": [], "comm": [], "rmse": []}
@@ -254,6 +259,8 @@ def run_fl_host(model_cfg, fl_cfg, train_data, test_data, key, *,
         "comm_down": server["comm_down"],
         "comm_up": server["comm_up"],
     }
+    if "comm_scales" in server:
+        state["comm_scales"] = server["comm_scales"]
     history["client_store"] = store
     return E._finalize_history(history, state, meta, model_cfg, fl_cfg,
                                final_rmse, comm_total, checkpoint_dir)

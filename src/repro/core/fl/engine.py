@@ -112,7 +112,10 @@ class FLConfig:
     # share_ratio*D parameters where |w_global - w_client| is largest (server
     # ranks against its stale copy of each client's last upload).
     # comm_bits: payload precision on the wire (32 = paper; 16 = bf16-style
-    # quantized exchange). Counted in metrics["comm_bytes"].
+    # quantized exchange; 8 = int8 + one fp32 scale per param leaf, symmetric
+    # absmax — mirrors checkpoint.quantize_tree(bits=8)). Counted in
+    # metrics["comm_bytes"]; at 8 bits the per-payload scale headers are real
+    # wire overhead and accrue in the state's "comm_scales" counter.
     comm_bits: int = 32
     # client_chunk: upper bound on clients materialized per LocalUpdate step
     # AND per evaluate_rmse forward. None = plain vmap over all K clients
@@ -159,6 +162,10 @@ class FLConfig:
     def __post_init__(self):
         # Cross-field validation: fail loudly at config time instead of as an
         # opaque shape/tracer error deep inside lax.map or the scatter.
+        if self.comm_bits not in (8, 16, 32):
+            raise ValueError(
+                f"FLConfig.comm_bits: unsupported payload width: "
+                f"{self.comm_bits} bits (choose 8, 16 or 32)")
         if self.client_chunk is not None and self.client_chunk <= 0:
             raise ValueError(
                 f"client_chunk must be a positive client count or None, got "
@@ -244,14 +251,67 @@ def gate_count(gates, client_tree):
     return total
 
 
-def gate_bytes(gates, client_tree):
-    """Bytes crossing the wire (uses each client leaf's dtype itemsize)."""
+def _payload_clients(gate_leaf):
+    """Per-client 0/1 indicator of "this client exchanges >= 1 element of
+    this leaf" — the clients that pull/push a wire payload for it."""
+    flat = gate_leaf.reshape(gate_leaf.shape[0], -1)
+    return jnp.any(flat != 0, axis=1)
+
+
+def wire_scale_count(gates):
+    """Number of per-payload scale headers an int8 wire carries for the
+    realized ``gates``: one fp32 scale per (client, gated leaf) payload —
+    a client exchanging any element of a leaf ships that leaf's scale."""
+    total = jnp.zeros((), ACCOUNTING_DTYPE)
+    for g in jax.tree_util.tree_leaves(gates):
+        total = total + jnp.sum(_payload_clients(g).astype(ACCOUNTING_DTYPE))
+    return total
+
+
+def gate_bytes(gates, client_tree, comm_bits: Optional[int] = None):
+    """Bytes crossing the wire given realized gates.
+
+    Default (``comm_bits=None``): each client leaf's dtype itemsize — the
+    materialized-state view (a float32 leaf is a 32-bit wire). With
+    ``comm_bits``, the WIRE payload width instead; at ``comm_bits=8`` the
+    per-payload fp32 scale headers (:func:`wire_scale_count` — one per
+    (client, leaf) payload actually exchanged) are real bytes on the wire
+    and are counted on top of the int8 elements. A uniform ``comm_bits / 8``
+    per element is NOT the whole story below 16 bits.
+    """
     total = jnp.zeros((), ACCOUNTING_DTYPE)
     for g, l in zip(jax.tree_util.tree_leaves(gates),
                     jax.tree_util.tree_leaves(client_tree)):
-        per_gate = _gate_scale(g, l) * jnp.dtype(l.dtype).itemsize
+        width = (jnp.dtype(l.dtype).itemsize if comm_bits is None
+                 else comm_bits / 8.0)
+        per_gate = _gate_scale(g, l) * width
         total = total + jnp.sum(g, dtype=ACCOUNTING_DTYPE) * per_gate
+    if comm_bits == 8:
+        total = total + wire_scale_count(gates) * 4.0
     return total
+
+
+def quantize_wire_vec(vec, meta, comm_bits: int, key=None):
+    """Wire round-trip of ONE flat ``(D,)`` param payload at ``comm_bits``:
+    what the receiver reconstructs. ``16`` is the bf16 round-trip; ``8``
+    unflattens through ``meta`` and round-trips every param leaf through
+    ``checkpoint.quantize_tree(bits=8)`` (int8 + per-leaf fp32 absmax
+    scale), so training-side wire math and serving-side restore
+    (``load_forecaster(comm_bits=8)``) reconstruct identically.
+
+    ``key`` (int8 only) selects stochastic rounding — the round hot path
+    passes a per-round key so the training-time quantizer is unbiased;
+    ``None`` is the deterministic round-to-nearest that restore uses."""
+    if comm_bits == 32:
+        return vec
+    if comm_bits == 16:
+        return vec.astype(jnp.bfloat16).astype(jnp.float32)
+    from repro.checkpoint import quantize_tree
+
+    tree = tree_unflatten_from_vector(vec, meta)
+    out, _ = tree_flatten_to_vector(
+        quantize_tree(tree, comm_bits, where="FLConfig.comm_bits", key=key))
+    return out
 
 
 def mix_down_count(client_tree, global_tree, gates, *, use_pallas: bool = False,
@@ -339,6 +399,12 @@ def init_fl_state(model_cfg: forecast.ForecastConfig, fl_cfg: FLConfig, key,
         "comm_down": jnp.zeros((), ACCOUNTING_DTYPE),
         "comm_up": jnp.zeros((), ACCOUNTING_DTYPE),
     }
+    if fl_cfg.comm_bits == 8:
+        # int8 wire: count per-payload fp32 scale headers too. Added ONLY at
+        # 8 bits so the carry structure of every existing config is
+        # unchanged (comm_bits is jit-static, so the structure stays static
+        # per config).
+        state["comm_scales"] = jnp.zeros((), ACCOUNTING_DTYPE)
     return state, meta
 
 
@@ -433,7 +499,16 @@ def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
     gates = policy.downlink_gates(
         (k_smask, k_fmask), state["w_global"], state["w_clients"], selected)
 
-    if fl_cfg.comm_bits < 32:
+    if fl_cfg.comm_bits == 8:
+        # int8 + per-leaf scale downlink payload: the server quantizes ONE
+        # w_global payload; every receiver dequantizes the same ints+scales.
+        # Stochastic rounding (fresh key per round, folded off the round key
+        # without disturbing the split chain): nearest-rounding is biased and
+        # stalls training once updates drop below half a quantization step.
+        k_wire = jax.random.fold_in(key, 8)
+        w_wire = quantize_wire_vec(state["w_global"], meta, 8,
+                                   key=jax.random.fold_in(k_wire, 0))
+    elif fl_cfg.comm_bits < 32:
         # quantized downlink payload (beyond-paper): bf16-style round-trip
         w_wire = state["w_global"].astype(jnp.bfloat16).astype(jnp.float32)
     else:
@@ -462,7 +537,14 @@ def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
     # ---- uplink + aggregation (eq. 5; eq. 3 when S' == I) ------------------
     up_masks = policy.uplink_gates(k_upmask, state["w_global"], w_clients, selected)
 
-    if fl_cfg.comm_bits < 32:
+    if fl_cfg.comm_bits == 8:
+        # each uploader quantizes its OWN row (per-client per-leaf scales)
+        # under its own stochastic-rounding key
+        w_clients_wire = jax.vmap(
+            lambda i, row: quantize_wire_vec(
+                row, meta, 8, key=jax.random.fold_in(k_wire, 1 + i))
+        )(jnp.arange(K), w_clients)
+    elif fl_cfg.comm_bits < 32:
         w_clients_wire = w_clients.astype(jnp.bfloat16).astype(jnp.float32)
     else:
         w_clients_wire = w_clients
@@ -486,6 +568,17 @@ def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
         "comm_total": comm_down + comm_up,
         "comm_bytes": (comm_down + comm_up) * (fl_cfg.comm_bits / 8.0),
     }
+    if fl_cfg.comm_bits == 8:
+        # scale headers: every (client, param leaf) payload actually
+        # exchanged ships one fp32 scale — len(meta.sizes) leaves per flat
+        # payload, for each client with any gated element that direction.
+        n_leaves = float(len(meta.sizes))
+        scales = (state["comm_scales"]
+                  + n_leaves * wire_scale_count(gates)
+                  + n_leaves * wire_scale_count(up_masks))
+        new_state["comm_scales"] = scales
+        metrics["comm_scales"] = scales
+        metrics["comm_bytes"] = metrics["comm_bytes"] + scales * 4.0
     return new_state, metrics
 
 
@@ -1004,6 +1097,13 @@ def _finalize_history(history, state, meta, model_cfg, fl_cfg, final_rmse,
     (launch/serve_forecast) restores."""
     history["final_rmse"] = final_rmse
     history["final_comm"] = comm_total
+    # Wire bytes: payload elements at comm_bits each, PLUS — at 8 bits — the
+    # accumulated per-payload fp32 scale headers (state["comm_scales"]).
+    scale_count = (float(state["comm_scales"])
+                   if "comm_scales" in state else 0.0)
+    history["final_scale_bytes"] = scale_count * 4.0
+    history["final_comm_bytes"] = (comm_total * (fl_cfg.comm_bits / 8.0)
+                                   + scale_count * 4.0)
     history["rounds_run"] = len(history["round"])
     history["state"] = state
     history["meta"] = meta

@@ -41,6 +41,13 @@ class ForecastConfig:
     mixers: Tuple[str, ...] = ("id", "id", "attn")   # LoGTST
     dropout: float = 0.0        # kept for config parity; eval-mode graphs
     revin: bool = True
+    # use_flash_attn: route _self_attn through the Pallas flash-attention
+    # kernel (repro.kernels.flash_attention, bidirectional causal=False,
+    # interpret-mode fallback off-TPU). Numerics match the dense jnp path to
+    # FLASH_ATTN_TOL (guarded in tests/test_flash_forecast.py, the same
+    # bit-tolerance contract psgf_mix carries); False (the default) is the
+    # exact historical dense softmax, bitwise.
+    use_flash_attn: bool = False
 
     @property
     def num_tokens(self) -> int:
@@ -202,15 +209,37 @@ def block_spec(cfg: ForecastConfig, mixer: str):
     return spec
 
 
+# Pinned flash-vs-dense tolerance: both paths softmax in fp32 over the same
+# scores, so they differ only in accumulation order (online vs dense softmax)
+# and the cast point of the output. Guarded per preset, forward AND
+# VJP-through-mse_loss, in tests/test_flash_forecast.py — the same contract
+# psgf_mix pins for the downlink mix.
+FLASH_ATTN_TOL = 1e-5
+
+
 def _self_attn(p, x, cfg: ForecastConfig):
-    """Bidirectional MHSA over tokens (eq. 2). x: (B, N, D)."""
+    """Bidirectional MHSA over tokens (eq. 2). x: (B, N, D).
+
+    ``cfg.use_flash_attn`` routes the softmax(QK^T)V contraction through the
+    Pallas flash-attention kernel (online softmax, no materialized
+    (B, H, N, N) score matrix); the default keeps the dense einsum path
+    bitwise unchanged. Both share the projections and output mix.
+    """
     hd = cfg.d_model // cfg.num_heads
     q = jnp.einsum("bnd,dhk->bnhk", x, p["wq"]) + p["bq"]
     k = jnp.einsum("bnd,dhk->bnhk", x, p["wk"]) + p["bk"]
     v = jnp.einsum("bnd,dhk->bnhk", x, p["wv"]) + p["bv"]
-    s = jnp.einsum("bnhk,bmhk->bhnm", q, k) / math.sqrt(hd)
-    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
-    o = jnp.einsum("bhnm,bmhk->bnhk", a, v)
+    if cfg.use_flash_attn:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        # (B, N, H, hd) is already the kernel layout; tokens attend
+        # bidirectionally (eq. 2), so causal=False. interpret=None falls
+        # back to interpret mode off-TPU automatically.
+        o = flash_attention(q, k, v, causal=False, interpret=None)
+    else:
+        s = jnp.einsum("bnhk,bmhk->bhnm", q, k) / math.sqrt(hd)
+        a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhnm,bmhk->bnhk", a, v)
     return jnp.einsum("bnhk,hkd->bnd", o, p["wo"]) + p["bo"]
 
 

@@ -138,8 +138,9 @@ def load_forecaster(ckpt_dir: str, step: int | None = None,
 
     ``comm_bits`` mirrors ``FLConfig.comm_bits`` on the inference side:
     ``comm_bits=16`` quantizes the restored params through a bf16 wire
+    round-trip, ``comm_bits=8`` through an int8 + per-leaf fp32 scale
     round-trip (``repro.checkpoint.quantize_tree``) — what a serving replica
-    reconstructs after pulling a 16-bit payload from the trainer.
+    reconstructs after pulling a 16- or 8-bit payload from the trainer.
     """
     from repro.checkpoint import load_checkpoint, quantize_tree, read_manifest
 
@@ -149,4 +150,6 @@ def load_forecaster(ckpt_dir: str, step: int | None = None,
     fc = Forecaster(forecast.ForecastConfig(**cfg_dict))
     tree, extra = load_checkpoint(ckpt_dir, {"params": fc.abstract_params()},
                                   step=step)
-    return fc, quantize_tree(tree["params"], comm_bits), extra
+    return fc, quantize_tree(tree["params"], comm_bits,
+                             where=f"load_forecaster(comm_bits={comm_bits})"), \
+        extra

@@ -438,7 +438,9 @@ def run_experiment(spec: ExperimentSpec, checkpoint_dir: Optional[str] = None,
                 "rounds": int(hist["rounds_run"]),
                 "rmse": float(hist["final_rmse"]),
                 "comm_params": float(hist["final_comm"]),
-                "comm_bytes": float(hist["final_comm"]) * fl_cfg.comm_bits / 8.0,
+                # engine-computed wire bytes: payload at comm_bits/8 per
+                # element + the int8 per-payload scale headers when present
+                "comm_bytes": float(hist["final_comm_bytes"]),
                 "train_s": round(time.time() - t0, 1),
             }
             rows.append(row)

@@ -61,7 +61,17 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     m_prev = m_scr[...]
     l_prev = l_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
+    # Masked positions must contribute EXACT zeros. `exp(s - m_new)` alone is
+    # not enough: on a block whose every key is masked (padding past kv_len,
+    # or a window that excludes the whole block), m_new stays NEG_INF and
+    # exp(NEG_INF - NEG_INF) == 1 — every masked key would leak 1.0 of
+    # softmax mass. The sequential kv walk happens to wipe that mass once a
+    # later block holds a valid key (corr underflows to 0), but rows with NO
+    # valid key would return a garbage average of v instead of 0, and the
+    # correctness of padded bidirectional calls would hinge on block-visit
+    # order. Zeroing through the mask makes padded keys inert by
+    # construction.
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
     acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(

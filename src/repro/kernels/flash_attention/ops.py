@@ -1,7 +1,20 @@
 """Jit'd public wrapper for the flash_attention Pallas kernel: pads sequence
 lengths to block multiples, dispatches, unpads. ``interpret=True`` executes
 the kernel body in Python on CPU (how this container validates it); on real
-TPUs the same call lowers to Mosaic.
+TPUs the same call lowers to Mosaic. ``interpret=None`` (the default) picks
+interpret mode automatically whenever the default backend is not a TPU, so
+callers like the forecaster's ``_self_attn`` can route through the kernel
+unconditionally.
+
+Differentiation: ``pallas_call`` has no autodiff rule, so ``flash_attention``
+carries a ``jax.custom_vjp`` whose backward pass is the VJP of the dense jnp
+oracle (:func:`repro.kernels.flash_attention.ref.attention_ref`) on the saved
+(q, k, v) residuals. The oracle computes the same attention function (guarded
+to tolerance in tests/test_kernels.py and tests/test_flash_forecast.py), so
+the gradients are exact for the math while the backward recompute is the
+O(S^2) dense form — the right trade at the forecaster's token counts
+(num_tokens ~ 15-63), where the score matrix is tiny and a flash backward
+kernel would be all overhead.
 """
 from __future__ import annotations
 
@@ -11,12 +24,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
-def flash_attention(q, k, v, *, causal=True, window=None,
-                    block_q=512, block_k=512, interpret=False):
-    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd) -> (B,Sq,H,hd)."""
+def _flash_fwd_impl(causal, window, block_q, block_k, interpret, q, k, v):
+    """pad -> kernel -> unpad (the primal pipeline)."""
     B, Sq, H, hd = q.shape
     Skv = k.shape[1]
     bq = min(block_q, _round_up(Sq, 128))
@@ -30,6 +42,47 @@ def flash_attention(q, k, v, *, causal=True, window=None,
                                  block_q=bq, block_k=bk, kv_len=Skv,
                                  interpret=interpret)
     return out[:, :Sq]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _flash(causal, window, block_q, block_k, interpret, q, k, v):
+    return _flash_fwd_impl(causal, window, block_q, block_k, interpret, q, k, v)
+
+
+def _flash_fwd(causal, window, block_q, block_k, interpret, q, k, v):
+    out = _flash_fwd_impl(causal, window, block_q, block_k, interpret, q, k, v)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, block_q, block_k, interpret, res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda a, b, c: attention_ref(a, b, c, causal=causal, window=window),
+        q, k, v)
+    return vjp(do)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def _flash_jit(q, k, v, *, causal, window, block_q, block_k, interpret):
+    return _flash(causal, window, block_q, block_k, interpret, q, k, v)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=512, block_k=512, interpret=None):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd) -> (B,Sq,H,hd).
+
+    ``interpret=None`` auto-selects interpret mode off-TPU (same switch as
+    ``engine.mix_down_count`` uses for psgf_mix). Differentiable via a
+    custom VJP whose backward is the dense oracle's (see module docstring).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _flash_jit(q, k, v, causal=causal, window=window, block_q=block_q,
+                      block_k=block_k, interpret=interpret)
 
 
 def _round_up(x: int, m: int) -> int:

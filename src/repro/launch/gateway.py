@@ -549,7 +549,9 @@ def main():
     src.add_argument("--ckpt-dir", help="single-model checkpoint dir")
     src.add_argument("--manifest", help="routing-manifest experiment root")
     ap.add_argument("--policy", default=None)
-    ap.add_argument("--comm-bits", type=int, default=32, choices=(16, 32))
+    ap.add_argument("--comm-bits", type=int, default=32, choices=(8, 16, 32),
+                    help="restore payload width: 16 = bf16, 8 = int8 + "
+                         "per-leaf scale (validated at the CLI)")
     ap.add_argument("--denormalize", action="store_true",
                     help="raw-unit station-routed serving (--manifest only)")
     ap.add_argument("--host", default="127.0.0.1")

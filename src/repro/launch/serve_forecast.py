@@ -24,9 +24,9 @@ module turns those checkpoints into a batched, routed inference endpoint:
     ``repro.core.fl.engine.axis0_shardings`` — the same axis-0 layout the FL
     engine shards client state with); buckets the device count does not
     divide stay replicated;
-  * ``comm_bits=16`` restores bf16-QUANTIZED payloads
-    (``repro.checkpoint.quantize_tree``), mirroring ``FLConfig.comm_bits`` on
-    the inference side;
+  * ``comm_bits=16`` restores bf16-QUANTIZED payloads, ``comm_bits=8``
+    int8 + per-leaf-scale payloads (``repro.checkpoint.quantize_tree``),
+    mirroring ``FLConfig.comm_bits`` on the inference side;
   * :func:`stream_evaluate` is the continuous-evaluation harness: it replays
     a held-out day of ``ForecastTask`` windows through the queue in arrival
     order and tracks per-cluster ONLINE RMSE (a per-request timeout skips and
@@ -1088,9 +1088,11 @@ def main():
     ap.add_argument("--policy", default=None,
                     help="grid policy to serve from a multi-policy manifest")
     ap.add_argument("--step", type=int, default=None)
-    ap.add_argument("--comm-bits", type=int, default=32, choices=(16, 32),
-                    help="16 = bf16-quantized restore (FLConfig.comm_bits "
-                         "mirrored on the inference side)")
+    ap.add_argument("--comm-bits", type=int, default=32, choices=(8, 16, 32),
+                    help="16 = bf16-quantized restore, 8 = int8 + per-leaf "
+                         "scale restore (FLConfig.comm_bits mirrored on the "
+                         "inference side; validated here so a bad width "
+                         "fails at the CLI, not deep inside restore)")
     ap.add_argument("--shard-batch", action="store_true",
                     help="shard each bucket's batch axis over local devices")
     ap.add_argument("--denormalize", action="store_true",

@@ -1,0 +1,168 @@
+"""ForecastConfig.use_flash_attn: the Pallas flash-attention kernel in the
+forecaster hot path.
+
+Contracts (the same bit-tolerance shape psgf_mix pins for the downlink mix):
+
+  * FORWARD — for every ForecastConfig preset (logtst / patchtst / mlpformer /
+    idformer), `forward` with the flash route matches the dense jnp path
+    within `forecast.FLASH_ATTN_TOL`;
+  * VJP — gradients of `mse_loss` through the flash route (custom VJP, dense
+    oracle backward) match the dense path's gradients to the same tolerance;
+  * DEFAULT OFF — `use_flash_attn=False` (the default) is BITWISE identical
+    to the historical dense softmax path (a frozen copy lives here as the
+    reference);
+  * RESTORE — the flag round-trips through save_forecaster/load_forecaster
+    and ForecastServer serves a flash-enabled checkpoint, so trained and
+    served models agree; checkpoints written before the flag existed restore
+    with it off.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import forecast as F
+
+SMALL = dict(look_back=64, horizon=4, d_model=32, num_heads=4, d_ff=64,
+             patch_len=8, stride=4)
+PRESETS = ["logtst", "patchtst", "mlpformer", "idformer"]
+
+
+def _pair(mk, **kw):
+    cfg = getattr(F, f"{mk}_config")(**kw)
+    return cfg, dataclasses.replace(cfg, use_flash_attn=True)
+
+
+def _max_leaf_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+@pytest.mark.parametrize("mk", PRESETS)
+def test_flash_forward_matches_dense(rng_key, mk):
+    cfg, fcfg = _pair(mk, **SMALL)
+    params = F.init_params(cfg, rng_key)
+    x = jax.random.normal(rng_key, (8, SMALL["look_back"]))
+    dense = F.forward(cfg, params, x)
+    flash = F.forward(fcfg, params, x)
+    assert float(jnp.max(jnp.abs(dense - flash))) <= F.FLASH_ATTN_TOL
+
+
+@pytest.mark.parametrize("mk", PRESETS)
+def test_flash_vjp_through_mse_loss_matches_dense(rng_key, mk):
+    cfg, fcfg = _pair(mk, **SMALL)
+    params = F.init_params(cfg, rng_key)
+    kx, ky = jax.random.split(rng_key)
+    x = jax.random.normal(kx, (8, SMALL["look_back"]))
+    y = jax.random.normal(ky, (8, SMALL["horizon"]))
+    g_dense = jax.grad(lambda p: F.mse_loss(cfg, p, x, y))(params)
+    g_flash = jax.grad(lambda p: F.mse_loss(fcfg, p, x, y))(params)
+    assert _max_leaf_diff(g_dense, g_flash) <= F.FLASH_ATTN_TOL
+
+
+def test_flash_default_config_geometry(rng_key):
+    """The paper's LoGTST geometry (d_model=128, 16 heads, N=15 tokens —
+    head_dim 8, N far from the kernel's 128 block) through the flash route:
+    the padded bidirectional call the production config makes."""
+    cfg, fcfg = _pair("logtst", look_back=128, horizon=2)
+    assert cfg.num_tokens == 15
+    params = F.init_params(cfg, rng_key)
+    x = jax.random.normal(rng_key, (4, 128))
+    dense = F.forward(cfg, params, x)
+    flash = F.forward(fcfg, params, x)
+    assert float(jnp.max(jnp.abs(dense - flash))) <= F.FLASH_ATTN_TOL
+
+
+def _dense_self_attn_frozen(p, x, cfg):
+    """The pre-flash `_self_attn`, verbatim — the bitwise reference for the
+    default-off path."""
+    hd = cfg.d_model // cfg.num_heads
+    q = jnp.einsum("bnd,dhk->bnhk", x, p["wq"]) + p["bq"]
+    k = jnp.einsum("bnd,dhk->bnhk", x, p["wk"]) + p["bk"]
+    v = jnp.einsum("bnd,dhk->bnhk", x, p["wv"]) + p["bv"]
+    s = jnp.einsum("bnhk,bmhk->bhnm", q, k) / math.sqrt(hd)
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhnm,bmhk->bnhk", a, v)
+    return jnp.einsum("bnhk,hkd->bnd", o, p["wo"]) + p["bo"]
+
+
+def test_default_off_bitwise_identical_to_frozen_dense(rng_key):
+    """use_flash_attn=False must run the exact historical graph."""
+    cfg = F.patchtst_config(**SMALL)
+    assert cfg.use_flash_attn is False
+    params = F.init_params(cfg, rng_key)
+    attn_p = params["blocks"]["b0"]["attn"]
+    x = jax.random.normal(rng_key, (4, cfg.num_tokens, cfg.d_model))
+    got = F._self_attn(attn_p, x, cfg)
+    want = _dense_self_attn_frozen(attn_p, x, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flash_flag_checkpoint_roundtrip(rng_key, tmp_path):
+    """save_forecaster -> load_forecaster preserves use_flash_attn, and the
+    restored model forwards within tolerance of the dense path."""
+    from repro.core.forecaster import Forecaster, load_forecaster, \
+        save_forecaster
+
+    cfg, fcfg = _pair("logtst", **SMALL)
+    fc = Forecaster(fcfg)
+    params = fc.init_params(rng_key)
+    d = str(tmp_path / "ckpt")
+    save_forecaster(d, fc, params, step=1)
+    fc2, p2, _ = load_forecaster(d)
+    assert fc2.cfg.use_flash_attn is True
+    assert fc2.cfg == fcfg
+    x = jax.random.normal(rng_key, (4, SMALL["look_back"]))
+    np.testing.assert_array_equal(np.asarray(fc.forward(params, x)),
+                                  np.asarray(fc2.forward(p2, x)))
+    assert float(jnp.max(jnp.abs(fc2.forward(p2, x)
+                                 - F.forward(cfg, params, x)))) \
+        <= F.FLASH_ATTN_TOL
+
+
+def test_pre_flag_checkpoint_restores_with_flag_off(rng_key, tmp_path):
+    """Checkpoints written before use_flash_attn existed carry no such key;
+    restore must default it off (the bitwise-historical path)."""
+    import json
+    import os
+
+    from repro.core.forecaster import Forecaster, load_forecaster, \
+        save_forecaster
+
+    cfg = F.logtst_config(**SMALL)
+    fc = Forecaster(cfg)
+    params = fc.init_params(rng_key)
+    d = str(tmp_path / "ckpt")
+    save_forecaster(d, fc, params, step=1)
+    mpath = os.path.join(d, "step_00000001", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["extra"]["forecast_config"]["use_flash_attn"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    fc2, _, _ = load_forecaster(d)
+    assert fc2.cfg.use_flash_attn is False
+
+
+def test_server_serves_flash_checkpoint(rng_key, tmp_path):
+    """ForecastServer.from_checkpoint on a flash-enabled checkpoint: served
+    forecasts == direct flash forward (trained and served models agree)."""
+    from repro.core.forecaster import Forecaster, save_forecaster
+    from repro.launch.serve_forecast import ForecastServer
+
+    _, fcfg = _pair("logtst", **SMALL)
+    fc = Forecaster(fcfg)
+    params = fc.init_params(rng_key)
+    d = str(tmp_path / "ckpt")
+    save_forecaster(d, fc, params, step=1)
+    server = ForecastServer.from_checkpoint(d, max_batch=4)
+    assert server.forecaster.cfg.use_flash_attn is True
+    x = np.asarray(jax.random.normal(rng_key, (4, 2, SMALL["look_back"])),
+                   np.float32)
+    got = server.predict(x)
+    want = np.asarray(fc.forward_multivariate(params, jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    server.close()

@@ -1,0 +1,288 @@
+"""The int8 wire format: ``quantize_tree(bits=8)`` and ``FLConfig.comm_bits=8``.
+
+Covers the quantization-seam bug sweep:
+
+  * int8 + per-leaf fp32 scale round-trip semantics (symmetric absmax,
+    integer/bool leaves pass through UNTOUCHED — the regression the 16-bit
+    path already honored);
+  * unsupported widths fail loudly AND name the call site (``where=``), and
+    ``FLConfig`` validates ``comm_bits`` at construction;
+  * BYTE ACCOUNTING — at 8 bits the per-payload fp32 scale headers are real
+    wire overhead: for every policy, the engine's reported ``comm_bytes``
+    must equal payload bytes (``comm_total * 1``) + scale bytes
+    (``comm_scales * 4``), with ``comm_scales`` equal to the count
+    reconstructed from the realized gates (one scale per (client, param
+    leaf) payload per direction); ``gate_bytes(comm_bits=8)`` carries the
+    same headers;
+  * every driver (loop / scan / while / host) agrees on the int8 counters;
+  * int8 comm still trains and halves the bf16 wire (minus the scale
+    overhead).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import quantize_tree
+from repro.core import forecast as F
+from repro.core.fl import engine as E
+from repro.core.fl import masks as M
+from repro.core.fl import policies as pol
+from repro.data.synthetic import nn5_synthetic
+from repro.data.windowing import client_datasets, client_series_datasets
+
+TINY = dict(look_back=32, horizon=2, d_model=16, num_heads=2, d_ff=32,
+            patch_len=8, stride=4)
+
+
+def _tiny(policy="psgf", num_clients=6, **fl_kw):
+    model_cfg = F.logtst_config(**TINY)
+    fl_cfg = E.FLConfig(policy=policy, num_clients=num_clients, local_steps=2,
+                        batch_size=8, **fl_kw)
+    series = nn5_synthetic(seed=0, num_clients=num_clients, num_days=200)
+    tr, va, te, _ = client_datasets(series, 32, 2)
+    return model_cfg, fl_cfg, jnp.asarray(tr), jnp.asarray(te)
+
+
+# ---- quantize_tree(bits=8) ------------------------------------------------
+
+
+def test_quantize_tree_int8_roundtrip_error_bound(rng_key):
+    """Symmetric absmax: every float value lands within scale/2 of its
+    original (scale = absmax / 127), and the leaf absmax survives exactly
+    up to rounding."""
+    tree = {"a": jax.random.normal(rng_key, (64, 3)),
+            "b": 100.0 * jax.random.normal(jax.random.PRNGKey(7), (11,))}
+    q = quantize_tree(tree, 8)
+    for k in tree:
+        scale = float(jnp.max(jnp.abs(tree[k]))) / 127.0
+        err = float(jnp.max(jnp.abs(q[k] - tree[k])))
+        assert err <= scale / 2 + 1e-7, (k, err, scale)
+        # quantized values are exact multiples of the per-leaf scale
+        ints = np.asarray(q[k]) / scale
+        np.testing.assert_allclose(ints, np.round(ints), atol=1e-4)
+
+
+def test_quantize_tree_int8_int_bool_leaves_untouched():
+    """Integer/bool leaves must pass through int8 quantization unmodified —
+    same regression contract the bf16 path honors (Adam step counters and
+    boolean masks ride in checkpoint trees)."""
+    tree = {"w": jnp.linspace(-3.0, 3.0, 16),
+            "steps": jnp.arange(5, dtype=jnp.int32),
+            "flags": jnp.array([True, False, True])}
+    q = quantize_tree(tree, 8)
+    assert q["steps"].dtype == jnp.int32
+    assert q["flags"].dtype == jnp.bool_
+    np.testing.assert_array_equal(np.asarray(q["steps"]),
+                                  np.asarray(tree["steps"]))
+    np.testing.assert_array_equal(np.asarray(q["flags"]),
+                                  np.asarray(tree["flags"]))
+    assert q["w"].dtype == tree["w"].dtype
+
+
+def test_quantize_tree_stochastic_rounding_unbiased():
+    """The keyed int8 quantizer (what the round hot path uses) must be
+    UNBIASED: averaging round-trips over many keys converges to the original
+    values even where nearest-rounding pins to a grid point. Deterministic
+    nearest-rounding (key=None) is biased by construction — that bias is why
+    int8 training stalls without stochastic rounding — so the mean stochastic
+    error must land well inside the half-step the deterministic quantizer
+    commits to."""
+    # values sitting 0.4 steps off the grid: nearest-rounding errs by
+    # 0.4 * scale on every one of them, always in the same direction
+    scale = 1.27 / 127.0
+    leaf = jnp.array([0.4 * scale, 1.4 * scale, -0.6 * scale, 1.27])
+    reps = 400
+    acc = np.zeros(leaf.shape, np.float64)
+    for i in range(reps):
+        acc += np.asarray(
+            quantize_tree({"w": leaf}, 8, key=jax.random.PRNGKey(i))["w"])
+    mean_err = np.abs(acc / reps - np.asarray(leaf))
+    det_err = np.abs(np.asarray(quantize_tree({"w": leaf}, 8)["w"])
+                     - np.asarray(leaf))
+    assert float(np.max(mean_err[:3])) < 0.1 * scale, mean_err
+    assert float(np.max(det_err[:3])) > 0.35 * scale  # the bias being fixed
+    # keyed quantization is still deterministic per key (resume-safe)
+    a = quantize_tree({"w": leaf}, 8, key=jax.random.PRNGKey(3))["w"]
+    b = quantize_tree({"w": leaf}, 8, key=jax.random.PRNGKey(3))["w"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantize_tree_zero_leaf_safe():
+    """All-zero float leaves (fresh biases) must survive: scale falls back
+    to 1, payload is all-zero ints."""
+    q = quantize_tree({"b": jnp.zeros((7,))}, 8)
+    np.testing.assert_array_equal(np.asarray(q["b"]), np.zeros(7))
+
+
+def test_quantize_tree_bad_width_names_call_site():
+    with pytest.raises(ValueError, match=r"quantize_tree.*12 bits"):
+        quantize_tree({"w": jnp.ones(3)}, 12)
+    with pytest.raises(ValueError, match=r"my_caller.*4 bits"):
+        quantize_tree({"w": jnp.ones(3)}, 4, where="my_caller")
+
+
+def test_load_forecaster_bad_width_names_call_site(rng_key, tmp_path):
+    from repro.core.forecaster import Forecaster, load_forecaster, \
+        save_forecaster
+
+    fc = Forecaster(F.logtst_config(**TINY))
+    d = str(tmp_path / "ckpt")
+    save_forecaster(d, fc, fc.init_params(rng_key), step=1)
+    with pytest.raises(ValueError, match=r"load_forecaster\(comm_bits=12\)"):
+        load_forecaster(d, comm_bits=12)
+
+
+def test_flconfig_rejects_bad_comm_bits():
+    with pytest.raises(ValueError, match=r"comm_bits.*12"):
+        E.FLConfig(comm_bits=12)
+    for bits in (8, 16, 32):
+        assert E.FLConfig(comm_bits=bits).comm_bits == bits
+
+
+# ---- scale-header byte accounting -----------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["online", "pso", "psgf", "psgf_topk"])
+def test_round_comm_bytes_equals_payload_plus_scales(policy):
+    """PROPERTY (all 4 policies): at comm_bits=8 the reported comm_bytes
+    must decompose EXACTLY into payload bytes + scale-header bytes, and the
+    scale count must equal len(meta.sizes) per (client, direction) payload
+    actually exchanged — reconstructed from the realized downlink gates and
+    the selection (every policy's uplink payload set == the selected
+    clients)."""
+    model_cfg, fl_cfg, tr, te = _tiny(policy, comm_bits=8)
+    state, meta = E.init_fl_state(model_cfg, fl_cfg, jax.random.PRNGKey(0))
+    w0 = state["w_global"]
+    wc0 = state["w_clients"]
+    key = jax.random.PRNGKey(1)
+    s1, m1 = E.fl_round(state, tr, key, model_cfg, fl_cfg, meta)
+
+    # identity: bytes == payload (1 byte/element) + scales (4 bytes each)
+    assert float(m1["comm_bytes"]) == pytest.approx(
+        float(m1["comm_total"]) * 1.0 + float(m1["comm_scales"]) * 4.0)
+    assert float(s1["comm_scales"]) == float(m1["comm_scales"])
+
+    # replay the round's key chain to reconstruct the payload sets
+    k_sel, k_smask, k_fmask, k_upmask, _ = jax.random.split(key, 5)
+    selected = M.select_clients(k_sel, fl_cfg.num_clients, fl_cfg.select_ratio)
+    policy_obj = pol.from_config(fl_cfg)
+    gates = policy_obj.downlink_gates((k_smask, k_fmask), w0, wc0, selected)
+    receivers = float(jnp.sum(jnp.any(gates != 0, axis=1)))
+    uploaders = float(jnp.sum(selected))   # all 4 policies gate uplink by sel
+    L = len(meta.sizes)
+    assert float(m1["comm_scales"]) == pytest.approx(L * (receivers + uploaders))
+
+
+@pytest.mark.parametrize("granularity", ["element", "leaf"])
+def test_gate_bytes_comm_bits_includes_scale_headers(granularity):
+    """gate_bytes(comm_bits=8) == count * 1 byte + wire_scale_count * 4;
+    gate_bytes(comm_bits=32) == count * 4; default (dtype view) unchanged."""
+    key = jax.random.PRNGKey(3)
+    kg, kc, ksel, ks, kf = jax.random.split(key, 5)
+    K = 8
+    if granularity == "element":
+        global_tree = jax.random.normal(kg, (200,))
+        client_tree = jax.random.normal(kc, (K, 200))
+    else:
+        global_tree = {"a": jax.random.normal(kg, (4, 5)),
+                       "b": jax.random.normal(kg, (9,))}
+        client_tree = {"a": jax.random.normal(kc, (K, 4, 5)),
+                       "b": jax.random.normal(kc, (K, 9))}
+    selected = M.select_clients(ksel, K, 0.5)
+    p = (pol.PSGFFed(share_ratio=0.3, forward_ratio=0.1)
+         if granularity == "element" else
+         pol.LeafPSGF(share_ratio=0.5, forward_ratio=0.3))
+    gates = p.downlink_gates((ks, kf), global_tree, client_tree, selected)
+    count = float(E.gate_count(gates, client_tree))
+    scales = float(E.wire_scale_count(gates))
+    assert float(E.gate_bytes(gates, client_tree, comm_bits=8)) == \
+        pytest.approx(count * 1.0 + scales * 4.0)
+    assert float(E.gate_bytes(gates, client_tree, comm_bits=32)) == \
+        pytest.approx(count * 4.0)
+    assert float(E.gate_bytes(gates, client_tree, comm_bits=16)) == \
+        pytest.approx(count * 2.0)
+    # the default dtype view is the historical behavior, bit for bit
+    assert float(E.gate_bytes(gates, client_tree)) == pytest.approx(count * 4.0)
+
+
+def test_int8_state_has_scale_counter_only_at_8_bits():
+    """The comm_scales carry key exists ONLY at comm_bits=8 so every
+    existing config keeps its exact state structure (donated carries,
+    sharding maps and the 22-transfer while pin all key off it)."""
+    model_cfg, cfg8, _, _ = _tiny("psgf", comm_bits=8)
+    _, cfg16, _, _ = _tiny("psgf", comm_bits=16)
+    s8, _ = E.init_fl_state(model_cfg, cfg8, jax.random.PRNGKey(0))
+    s16, _ = E.init_fl_state(model_cfg, cfg16, jax.random.PRNGKey(0))
+    assert "comm_scales" in s8
+    assert "comm_scales" not in s16
+
+
+# ---- end-to-end: drivers, training, byte cut -------------------------------
+
+
+def test_int8_drivers_agree_and_history_decomposes():
+    """loop / scan / while / host report identical int8 wire counters, and
+    history carries final_comm_bytes == final_comm * 1 + final_scale_bytes."""
+    model_cfg = F.logtst_config(**TINY)
+    series = nn5_synthetic(seed=0, num_clients=6, num_days=200)
+    trs, vas, tes, _ = client_series_datasets(series, 32, 2)
+    trs, tes = jnp.asarray(trs), jnp.asarray(tes)
+    fl_cfg = E.FLConfig(policy="psgf", num_clients=6, local_steps=2,
+                        batch_size=8, comm_bits=8, streaming_windows=True)
+    hists = {}
+    for driver in ("loop", "scan", "while", "host"):
+        hists[driver] = E.run_fl(model_cfg, fl_cfg, trs, tes,
+                                 jax.random.PRNGKey(0), max_rounds=4,
+                                 patience=10, eval_every=2, driver=driver)
+    h0 = hists["loop"]
+    assert h0["final_comm_bytes"] == pytest.approx(
+        h0["final_comm"] * 1.0 + h0["final_scale_bytes"])
+    assert h0["final_scale_bytes"] > 0
+    for driver in ("scan", "while", "host"):
+        h = hists[driver]
+        assert h["final_comm"] == h0["final_comm"], driver
+        assert h["final_comm_bytes"] == h0["final_comm_bytes"], driver
+        assert h["final_scale_bytes"] == h0["final_scale_bytes"], driver
+
+
+def test_int8_comm_under_bf16_bytes_and_still_trains():
+    """Same rounds, same seed: int8 moves the same element count as bf16 at
+    just over half the bytes (payload exactly half; scale headers are the
+    overhead), and training still converges."""
+    model_cfg, cfg16, tr, te = _tiny("psgf", comm_bits=16)
+    _, cfg8, _, _ = _tiny("psgf", comm_bits=8)
+    out = {}
+    for name, cfg in [("b16", cfg16), ("b8", cfg8)]:
+        state, meta = E.init_fl_state(model_cfg, cfg, jax.random.PRNGKey(0))
+        _, m = E.fl_round(state, tr, jax.random.PRNGKey(1), model_cfg, cfg,
+                          meta)
+        out[name] = (float(m["comm_total"]), float(m["comm_bytes"]))
+    assert out["b16"][0] == out["b8"][0]          # same elements on the wire
+    assert out["b8"][1] < out["b16"][1]           # fewer bytes, scales included
+    assert out["b8"][1] > out["b16"][1] / 2       # but NOT free: headers count
+
+    hist = E.run_fl(model_cfg, cfg8, tr, te, jax.random.PRNGKey(0),
+                    max_rounds=20, patience=20, eval_every=20)
+    assert hist["train_loss"][-1] < hist["train_loss"][0]
+    assert np.isfinite(hist["final_rmse"])
+
+
+def test_int8_checkpoint_restore_matches_wire(rng_key, tmp_path):
+    """load_forecaster(comm_bits=8) reconstructs EXACTLY what the engine's
+    int8 wire round-trip produces for the same params — trained and served
+    models agree on the quantized view."""
+    from repro.common.pytree_utils import tree_flatten_to_vector
+    from repro.core.forecaster import Forecaster, load_forecaster, \
+        save_forecaster
+
+    fc = Forecaster(F.logtst_config(**TINY))
+    params = fc.init_params(rng_key)
+    d = str(tmp_path / "ckpt")
+    save_forecaster(d, fc, params, step=1)
+    _, p8, _ = load_forecaster(d, comm_bits=8)
+    vec, meta = tree_flatten_to_vector(params)
+    wire_vec = E.quantize_wire_vec(vec, meta, 8)
+    restored_vec, _ = tree_flatten_to_vector(p8)
+    np.testing.assert_array_equal(np.asarray(wire_vec),
+                                  np.asarray(restored_vec))

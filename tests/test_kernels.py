@@ -67,6 +67,103 @@ def test_flash_attention_causality(rng_key):
     assert not np.allclose(np.asarray(o1[:, 64:]), np.asarray(o2[:, 64:]))
 
 
+PAD_BIDIR_CASES = [
+    # bidirectional (causal=False) at sequence lengths NOT divisible by
+    # block_k: the pad-to-block-multiple path must keep padded keys inert
+    # (regression for the padded-KV masking sweep; N=15 is the forecaster's
+    # LoGTST token count)
+    (2, 15, 15, 4, 4, 8, 128),
+    (1, 100, 100, 4, 2, 32, 64),
+    (1, 130, 130, 8, 8, 16, 128),
+    (3, 63, 63, 2, 1, 64, 128),
+]
+
+
+@pytest.mark.parametrize("case", PAD_BIDIR_CASES)
+def test_flash_attention_bidirectional_padded_vs_oracle(case, rng_key):
+    """causal=False at N % block_k != 0 against the dense jnp oracle — the
+    exact shape class the forecaster's `_self_attn` routes through the
+    kernel (tests/test_flash_forecast.py covers the end-to-end model)."""
+    B, Sq, Skv, H, KV, hd, bk = case
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd))
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd))
+    out = flash_attention(q, k, v, causal=False, block_q=bk, block_k=bk,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=False, window=None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_padded_keys_inert(rng_key):
+    """Garbage in the padded KV tail must not reach any output row: the
+    kernel masks by kv_len, so poisoning k/v past the true length changes
+    nothing (bidirectional, non-block-multiple lengths)."""
+    from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 16))
+    k = jax.random.normal(ks[1], (1, 256, 2, 16))
+    v = jax.random.normal(ks[2], (1, 256, 2, 16))
+    kv_len = 100                      # rows 100..255 are padding
+    base = flash_attention_kernel(q, k, v, causal=False, block_q=128,
+                                  block_k=128, kv_len=kv_len, interpret=True)
+    kp = k.at[:, kv_len:].set(50.0)   # large scores if the mask leaked
+    vp = v.at[:, kv_len:].set(-50.0)
+    poisoned = flash_attention_kernel(q, kp, vp, causal=False, block_q=128,
+                                      block_k=128, kv_len=kv_len,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(poisoned))
+
+
+def test_flash_attention_fully_masked_rows_zero(rng_key):
+    """A query row with NO valid key must output exact zeros. Before the
+    masked-exp hardening, a kv block with every key masked contributed
+    exp(NEG_INF - NEG_INF) == 1 of softmax mass per key — rows whose valid
+    window never materialized returned a garbage average of v instead."""
+    from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 16))
+    k = jax.random.normal(ks[1], (1, 128, 2, 16))
+    v = jax.random.normal(ks[2], (1, 128, 2, 16))
+    # bidirectional sliding window: q rows with q_pos - window >= kv_len see
+    # only padding (valid keys would start past the true kv length)
+    out = flash_attention_kernel(q, k, v, causal=False, window=16,
+                                 block_q=128, block_k=128, kv_len=100,
+                                 interpret=True)
+    dead = np.asarray(out)[0, 120:]   # q_pos >= 116 has no valid key
+    np.testing.assert_array_equal(dead, np.zeros_like(dead))
+    live = np.asarray(out)[0, :100]
+    ref = np.asarray(attention_ref(q[:, :100], k[:, :100], v[:, :100],
+                                   causal=False, window=16))
+    np.testing.assert_allclose(live, ref[0], atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_grad_matches_oracle(rng_key):
+    """flash_attention carries a custom VJP (backward = dense oracle VJP):
+    grads through the padded kernel must match grads of attention_ref."""
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (1, 60, 4, 16))
+    k = jax.random.normal(ks[1], (1, 60, 2, 16))
+    v = jax.random.normal(ks[2], (1, 60, 2, 16))
+
+    def f(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention(
+            q, k, v, causal=False, block_q=128, block_k=128, interpret=True)))
+
+    def g(q, k, v):
+        return jnp.sum(jnp.sin(attention_ref(q, k, v, causal=False,
+                                             window=None)))
+
+    got = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
+
+
 # ---------------- psgf_mix ----------------
 
 

@@ -70,8 +70,8 @@ def test_quantize_tree_identity_and_bf16(rng_key):
     mixed = {"w": jnp.ones((3,), jnp.float32), "t": jnp.arange(3)}
     q2 = quantize_tree(mixed, 16)
     assert q2["t"].dtype == mixed["t"].dtype  # ints pass through
-    with pytest.raises(ValueError, match="16 or 32"):
-        quantize_tree(p, 8)
+    with pytest.raises(ValueError, match="8, 16 or 32"):
+        quantize_tree(p, 12)  # int8+scale is a supported width since PR 9
 
 
 def test_bf16_restore_rmse_tolerance(rng_key, tmp_path):
