@@ -43,7 +43,13 @@ def record_env(**extra) -> dict:
         "device_kind": devs[0].device_kind,
         "num_devices": len(devs),
         "jax_version": jax.__version__,
+        "process_count": jax.process_count(),
+        "process_index": jax.process_index(),
     }
+    coordinator = os.environ.get("REPRO_COORDINATOR") or os.environ.get(
+        "JAX_COORDINATOR_ADDRESS")
+    if coordinator:
+        env["coordinator"] = coordinator
     env.update(extra)
     return env
 

@@ -55,7 +55,14 @@ Three measurements seed the perf trajectory of the round hot path:
     int8+per-leaf-scale, ``FLConfig.comm_bits``); asserts int8 bytes
     <= 0.55x bf16 with final RMSE within 2% of fp32. Runs in quick mode too.
 
-  PYTHONPATH=src python -m benchmarks.fl_rounds [--quick]
+  * ``multihost`` (``--multihost``) — single- vs 2-process
+    ``jax.distributed`` host-driver at the ``host_store`` config
+    (``num_clients=100_000``, ``participation=256``): rounds/sec and
+    per-process peak RSS on each side, with the 2-process run asserted
+    BITWISE identical to the single-process run (losses, comm, RMSE, final
+    weights) and the host store asserted to split exactly across processes.
+
+  PYTHONPATH=src python -m benchmarks.fl_rounds [--quick | --multihost]
 
 ``--quick`` (the CI smoke) still covers ALL THREE drivers, the streaming
 micro A/B and the participation micro pin + a small same-K A/B; it trims
@@ -66,6 +73,7 @@ Results -> experiments/fl_rounds/results.json.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import tempfile
@@ -420,6 +428,125 @@ def bench_host_store(num_clients: int = 100_000, cohort: int = 256,
     return row
 
 
+def _multihost_config(num_clients: int, cohort: int):
+    """The ONE config both sides of the multihost A/B run. client_chunk=16
+    divides the cohort block per process (S/P = 128) AND the per-process
+    client block (K/P = 50_000), the alignment conditions for bitwise
+    identity of the chunked LocalUpdate and the partitioned RMSE eval
+    (see docs/distributed.md)."""
+    model_cfg = get_forecaster("idformer", **_MICRO).cfg
+    fl_cfg = FLConfig(policy="psgf", num_clients=num_clients, local_steps=1,
+                      batch_size=2, streaming_windows=True,
+                      participation=cohort, client_chunk=16)
+    task = get_task("nn5", seed=0, num_clients=num_clients, num_days=40,
+                    look_back=8, horizon=1)
+    tr, va, te, _ = task.client_data(task.series(), streaming=True)
+    return model_cfg, fl_cfg, tr, te
+
+
+def _multihost_child() -> dict:
+    """One process of the multihost A/B (spawned by :func:`bench_multihost`;
+    single-process when launched without a cluster): runs the host driver at
+    the benchmark config and reports rounds/sec, per-process peak RSS and
+    the bitwise fingerprint the parent compares."""
+    import hashlib
+    import resource
+
+    from repro.launch.distributed import initialize_distributed
+
+    initialize_distributed()
+    K, S, rounds = (int(os.environ[k]) for k in
+                    ("REPRO_FLR_MH_K", "REPRO_FLR_MH_S", "REPRO_FLR_MH_R"))
+    model_cfg, fl_cfg, tr, te = _multihost_config(K, S)
+    kw = dict(patience=rounds + 1, eval_every=rounds, driver="host")
+    run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0), max_rounds=1,
+           **{**kw, "eval_every": 1, "patience": 2})   # warmup/compile
+    t0 = time.perf_counter()
+    hist = run_fl(model_cfg, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                  max_rounds=rounds, **kw)
+    secs = time.perf_counter() - t0
+    store = hist["client_store"]
+    print(json.dumps({
+        "process_count": jax.process_count(),
+        "process_index": jax.process_index(),
+        "seconds": secs,
+        "rounds_per_sec": rounds / secs,
+        "host_store_bytes": store.nbytes,
+        "peak_host_rss_bytes": resource.getrusage(
+            resource.RUSAGE_SELF).ru_maxrss * 1024,
+        "owned_block": [int(store.lo), int(store.hi)],
+        "losses_sha": hashlib.sha256(
+            np.asarray(hist["train_loss"], np.float64).tobytes()).hexdigest(),
+        "w_global_sha": hashlib.sha256(
+            np.asarray(hist["state"]["w_global"]).tobytes()).hexdigest(),
+        "final_rmse": hist["final_rmse"],
+        "comm_params": hist["final_comm"],
+    }))
+    return {}
+
+
+def bench_multihost(num_clients: int = 100_000, cohort: int = 256,
+                    rounds: int = 30):
+    """Single- vs 2-process ``run_fl(driver="host")`` at deployment scale:
+    the 2-process ``jax.distributed`` run must be BITWISE identical to the
+    single-process run (per-round losses, comm, RMSE, final weights) while
+    spreading the host-resident client fleet — per-process peak RSS is the
+    headline number. Both sides run in FRESH child processes so the RSS
+    readings are comparable (no inherited allocator state)."""
+    from repro.launch.distributed import spawn_processes
+
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["REPRO_FLR_MH_K"] = str(num_clients)
+    env["REPRO_FLR_MH_S"] = str(cohort)
+    env["REPRO_FLR_MH_R"] = str(rounds)
+    argv = [sys.executable, "-m", "benchmarks.fl_rounds", "--multihost-child"]
+    out = {"num_clients": num_clients, "participation": cohort,
+           "rounds": rounds, "client_chunk": 16}
+    reports = {}
+    for n in (1, 2):
+        procs = spawn_processes(n, argv, env=env, timeout=3600)
+        reps = []
+        for i, r in enumerate(procs):
+            if r.returncode != 0:
+                raise RuntimeError(
+                    f"multihost child {i}/{n} failed:\n{r.stderr[-4000:]}")
+            reps.append(json.loads(r.stdout.strip().splitlines()[-1]))
+        reports[n] = reps
+        for rep in reps:
+            print(f"fl_rounds,multihost,P={n},"
+                  f"proc={rep['process_index']},"
+                  f"{rep['rounds_per_sec']:.2f} rounds/s,"
+                  f"store={rep['host_store_bytes'] / 1e6:.1f}MB,"
+                  f"rss={rep['peak_host_rss_bytes'] / 1e6:.1f}MB,"
+                  f"block={rep['owned_block']},"
+                  f"rmse={rep['final_rmse']:.4f}", flush=True)
+    single = reports[1][0]
+    out["single_process"] = single
+    out["two_process"] = reports[2]
+    bitwise = all(rep["losses_sha"] == single["losses_sha"]
+                  and rep["w_global_sha"] == single["w_global_sha"]
+                  and rep["final_rmse"] == single["final_rmse"]
+                  and rep["comm_params"] == single["comm_params"]
+                  for rep in reports[2])
+    out["bitwise_equal"] = bitwise
+    out["rounds_per_sec_ratio"] = (reports[2][0]["rounds_per_sec"]
+                                   / single["rounds_per_sec"])
+    out["peak_rss_reduction"] = (
+        single["peak_host_rss_bytes"]
+        / max(r["peak_host_rss_bytes"] for r in reports[2]))
+    out["store_split"] = [r["host_store_bytes"] for r in reports[2]]
+    print(f"fl_rounds,multihost,bitwise={bitwise},"
+          f"speed_ratio={out['rounds_per_sec_ratio']:.2f}x,"
+          f"rss_reduction={out['peak_rss_reduction']:.2f}x", flush=True)
+    assert bitwise, ("2-process host-driver run diverged from the "
+                     "single-process run — the partitioned round must be "
+                     "bitwise identical")
+    assert sum(out["store_split"]) == single["host_store_bytes"], \
+        "partitioned stores must split the fleet exactly"
+    return out
+
+
 def bench_comm_bits(rounds: int = 15):
     """Wire-format A/B at matched rounds: ``FLConfig.comm_bits`` in
     {32, 16, 8} with the SAME model, data, seed and round budget (patience
@@ -499,5 +626,18 @@ if __name__ == "__main__":
                     help="driver A/B/C + streaming/participation micro A/Bs "
                          "only (CI smoke; still covers loop, scan AND "
                          "while); skips the 512-, 4096- and 100k-client runs")
+    ap.add_argument("--multihost", action="store_true",
+                    help="run ONLY the multihost section: single- vs "
+                         "2-process host-driver at num_clients=100k "
+                         "(bitwise-asserted; other committed sections are "
+                         "kept via keep_existing)")
+    ap.add_argument("--multihost-child", action="store_true",
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
-    run(quick=args.quick)
+    if args.multihost_child:
+        _multihost_child()
+    elif args.multihost:
+        results = {"env": record_env(), "multihost": bench_multihost()}
+        save_json("fl_rounds", "results", results, keep_existing=True)
+    else:
+        run(quick=args.quick)

@@ -54,6 +54,20 @@ _cohort_round = partial(
     jax.jit, static_argnames=("model_cfg", "fl_cfg", "meta", "policy"),
     donate_argnames=("state",))(E._round_body)
 
+# The staged cohort round for the multi-process partition mode: the same
+# three stages _round_body composes, jitted separately so each process can
+# run selection/downlink and uplink/aggregation REPLICATED (identical inputs
+# -> identical outputs, no collectives) while computing LocalUpdate only for
+# its own contiguous cohort-position block. Staged == fused is bitwise on
+# the pinned CPU toolchain (tests/test_distributed.py).
+_stage_down = partial(
+    jax.jit, static_argnames=("fl_cfg", "meta", "policy"))(E._round_down)
+_stage_local = partial(
+    jax.jit, static_argnames=("model_cfg", "fl_cfg", "meta"))(
+        E._local_update_all)
+_stage_up = partial(
+    jax.jit, static_argnames=("fl_cfg", "meta", "policy"))(E._round_up)
+
 
 @partial(jax.jit, static_argnames=("model_cfg", "meta"))
 def _chunk_sse(w_vec, data, model_cfg, meta):
@@ -87,7 +101,7 @@ class ClientStore:
     """
 
     def __init__(self, model_cfg, fl_cfg, train, test, key,
-                 init_params=None):
+                 init_params=None, partition=None):
         if not fl_cfg.streaming_windows:
             raise ValueError(
                 "ClientStore requires FLConfig.streaming_windows=True: the "
@@ -109,13 +123,34 @@ class ClientStore:
         self.model_cfg, self.fl_cfg = model_cfg, fl_cfg
         self.w_global = vec                               # device (D,)
         K, D = fl_cfg.num_clients, int(vec.shape[0])
+        # partition=(index, count): multi-process mode — this store holds
+        # ONLY its contiguous [lo, hi) block of the client axis (state rows
+        # AND raw series), so K's host RSS spreads count-ways across the
+        # jax.distributed processes (run_fl_host owns the cohort exchange).
+        if partition is not None and partition[1] > 1:
+            idx, cnt = int(partition[0]), int(partition[1])
+            if not 0 <= idx < cnt:
+                raise ValueError(f"partition index {idx} out of range "
+                                 f"for count {cnt}")
+            if K % cnt:
+                raise ValueError(
+                    f"partition mode needs num_clients divisible by the "
+                    f"process count, got K={K} over {cnt} processes")
+            self.partition = (idx, cnt)
+            self.lo, self.hi = (K * idx) // cnt, (K * (idx + 1)) // cnt
+        else:
+            self.partition = None
+            self.lo, self.hi = 0, K
+        Kp = self.hi - self.lo
         vec_np = np.asarray(vec)
-        self.w_clients = np.tile(vec_np[None, :], (K, 1))
-        self.adam_m = np.zeros((K, D), np.float32)
-        self.adam_v = np.zeros((K, D), np.float32)
-        self.adam_t = np.zeros((K,), np.int32)
-        self.train = train
-        self.test = test
+        self.w_clients = np.tile(vec_np[None, :], (Kp, 1))
+        self.adam_m = np.zeros((Kp, D), np.float32)
+        self.adam_v = np.zeros((Kp, D), np.float32)
+        self.adam_t = np.zeros((Kp,), np.int32)
+        self.train = np.ascontiguousarray(train[self.lo:self.hi])
+        self.test = np.ascontiguousarray(test[self.lo:self.hi])
+        self.num_clients = K
+        self._test_T = test.shape[1]
 
     @property
     def state_nbytes(self) -> int:
@@ -154,19 +189,72 @@ class ClientStore:
         self.adam_v[cohort] = np.asarray(sub["adam_v"])
         self.adam_t[cohort] = np.asarray(sub["adam_t"])
 
+    # --- multi-process partition exchange ---------------------------------
+    def cohort_payload(self, cohort: np.ndarray):
+        """This process's contribution to the cohort exchange: full-shape
+        ``(S, ...)`` client-state leaves plus the ``(S, T)`` train-slice
+        matrix, with the cohort positions whose client id falls in this
+        store's ``[lo, hi)`` block filled from the local rows and ZEROS
+        everywhere else. ``launch.distributed.merge_disjoint`` of every
+        process's payload reconstructs the full cohort bit-exactly (disjoint
+        int32-bitcast sum — no float arithmetic on the wire)."""
+        S = int(cohort.shape[0])
+        pos = np.nonzero((cohort >= self.lo) & (cohort < self.hi))[0]
+        loc = cohort[pos] - self.lo
+        D = self.w_clients.shape[1]
+        w = np.zeros((S, D), np.float32)
+        m = np.zeros((S, D), np.float32)
+        v = np.zeros((S, D), np.float32)
+        t = np.zeros((S,), np.int32)
+        data = np.zeros((S, self.train.shape[1]), np.float32)
+        w[pos] = self.w_clients[loc]
+        m[pos] = self.adam_m[loc]
+        v[pos] = self.adam_v[loc]
+        t[pos] = self.adam_t[loc]
+        data[pos] = self.train[loc]
+        return (w, m, v, t, data), pos, loc
+
+    def scatter_owned(self, pos: np.ndarray, loc: np.ndarray,
+                      sub: dict) -> None:
+        """Write back ONLY the cohort positions this store owns (``pos`` ->
+        local rows ``loc``, from :meth:`cohort_payload`) out of a full
+        replicated ``(S, ...)`` round result."""
+        self.w_clients[loc] = np.asarray(sub["w_clients"])[pos]
+        self.adam_m[loc] = np.asarray(sub["adam_m"])[pos]
+        self.adam_v[loc] = np.asarray(sub["adam_v"])[pos]
+        self.adam_t[loc] = np.asarray(sub["adam_t"])[pos]
+
     def evaluate_rmse(self, w_vec, client_chunk: Optional[int] = None) -> float:
         """RMSE of the global model over ALL clients' test windows, streamed
         from the host store in client chunks (default ``min(K, 1024)``; at
         most two compiled shapes — the chunk and the remainder). Matches
-        ``engine.evaluate_rmse`` up to float summation order."""
-        K = self.test.shape[0]
+        ``engine.evaluate_rmse`` up to float summation order.
+
+        In partition mode each process streams only its own client block and
+        the per-chunk f32 SSE values are allgathered and reduced in
+        (process, chunk) order — identical to the single-process chunk order
+        (hence a bitwise-identical RMSE) whenever ``chunk`` divides the
+        per-process block size ``K / count``."""
+        Kp = self.test.shape[0]
+        K = self.num_clients
         chunk = client_chunk if client_chunk is not None else min(K, 1024)
         W = self.model_cfg.look_back + self.model_cfg.horizon
         n = self.test.shape[1] - W + 1
-        sse = 0.0
-        for i in range(0, K, chunk):
+        local = []
+        for i in range(0, Kp, chunk):
             part = jnp.asarray(self.test[i:i + chunk])
-            sse += float(_chunk_sse(w_vec, part, self.model_cfg, self.meta))
+            local.append(float(_chunk_sse(w_vec, part, self.model_cfg,
+                                          self.meta)))
+        if self.partition is not None:
+            from repro.launch.distributed import allgather_blocks
+
+            cnt = self.partition[1]
+            merged = allgather_blocks(np.asarray(local, np.float32),
+                                      cnt * len(local))
+            local = [float(x) for x in merged]
+        sse = 0.0
+        for v in local:
+            sse += v
         return math.sqrt(sse / (K * n * self.model_cfg.horizon))
 
 
@@ -174,18 +262,38 @@ def run_fl_host(model_cfg, fl_cfg, train_data, test_data, key, *,
                 max_rounds: int = 300, patience: int = 10,
                 eval_every: int = 10, verbose: bool = False, policy=None,
                 checkpoint_dir: Optional[str] = None,
-                init_params=None) -> dict:
+                init_params=None, partition=None) -> dict:
     """The ``run_fl(driver="host")`` implementation: loop-driver round/stop
     semantics with the ``(K, D)`` client state host-resident and only the
     per-round cohort on device. See the module docstring for the round cycle
     and ``engine.run_fl`` for the shared contract; the returned history
     additionally carries ``history["client_store"]`` (the live
     :class:`ClientStore`) so callers can read residency stats or keep
-    training."""
+    training.
+
+    ``partition=(index, count)`` is the MULTI-PROCESS mode (defaults to
+    ``(jax.process_index(), jax.process_count())`` under an initialized
+    ``jax.distributed`` cluster, i.e. it activates automatically): every
+    process replays the identical server-side key chain and cohort sequence,
+    holds only its own ``K / count`` client block (state + raw series), and
+    each round (1) reconstructs the cohort's rows on every process via the
+    exact disjoint-bitcast merge, (2) runs selection/downlink replicated,
+    (3) computes LocalUpdate for its own contiguous ``S / count``
+    cohort-position block only, (4) allgathers the blocks (pure movement)
+    and (5) runs uplink/aggregation replicated. Every arithmetic stage is
+    either replicated or batch-invariant vmapped rows, and every exchange is
+    exact — so per-round states, comm counters and (chunk-aligned) RMSE are
+    BITWISE identical to the single-process run on the pinned CPU toolchain
+    (tests/test_distributed.py). Requires ``num_clients`` and the cohort
+    size divisible by ``count``, with at least 2 cohort rows per process."""
+    if partition is None and jax.process_count() > 1:
+        partition = (jax.process_index(), jax.process_count())
+    if partition is not None and partition[1] <= 1:
+        partition = None
     policy = pol.from_config(fl_cfg) if policy is None else policy
     key, init_key = jax.random.split(key)
     store = ClientStore(model_cfg, fl_cfg, train_data, test_data, init_key,
-                        init_params=init_params)
+                        init_params=init_params, partition=partition)
     W = model_cfg.look_back + model_cfg.horizon
     if min(store.train.shape[1], store.test.shape[1]) < W:
         raise ValueError(
@@ -194,6 +302,17 @@ def run_fl_host(model_cfg, fl_cfg, train_data, test_data, key, *,
 
     K, S = fl_cfg.num_clients, fl_cfg.participation_size()
     meta = store.meta
+    if partition is not None:
+        idx, cnt = store.partition
+        if S % cnt or S // cnt < 2:
+            raise ValueError(
+                f"partition mode needs the cohort size divisible by the "
+                f"process count with >= 2 rows per process (vmapped "
+                f"LocalUpdate rows are batch-invariant only for batches "
+                f">= 2), got participation={S} over {cnt} processes")
+        blo, bhi = (S * idx) // cnt, (S * (idx + 1)) // cnt
+        if checkpoint_dir is not None and idx != 0:
+            checkpoint_dir = None   # process 0 owns the checkpoint write
     server = {
         "w_global": store.w_global,
         "round": jnp.zeros((), jnp.int32),
@@ -220,10 +339,46 @@ def run_fl_host(model_cfg, fl_cfg, train_data, test_data, key, *,
             cohort = np.asarray(E.sample_cohort(k_cohort, K, S))
         else:
             cohort = full_cohort
-        sub_state = {**server, **store.gather(cohort)}
-        sub_new, metrics = _cohort_round(sub_state, store.gather_train(cohort),
-                                         rk, model_cfg, fl_cfg, meta, policy)
-        store.scatter(cohort, sub_new)
+        # The STAGED round (downlink -> LocalUpdate -> uplink), single- and
+        # multi-process alike, so both partitionings run the identical
+        # compiled stages (the fused _round_body computes bitwise-identical
+        # STATES, but XLA may fuse the train_loss reduction differently
+        # around a chunked lax.map — staging pins the metric too).
+        if partition is None:
+            sub = store.gather(cohort)
+            w_c, a_m, a_v, a_t = (sub["w_clients"], sub["adam_m"],
+                                  sub["adam_v"], sub["adam_t"])
+            data = store.gather_train(cohort)
+        else:
+            # exact cohort reconstruction: disjoint int32-bitcast merge of
+            # every process's owned rows
+            from repro.launch.distributed import merge_disjoint
+
+            payload, pos, loc = store.cohort_payload(cohort)
+            w_c, a_m, a_v, a_t, data = merge_disjoint(*payload)
+        sub_state = {**server, "w_clients": w_c, "adam_m": a_m,
+                     "adam_v": a_v, "adam_t": a_t}
+        down = _stage_down(sub_state, rk, fl_cfg, meta, policy)
+        local_keys = jax.random.split(down["k_local"], S)
+        if partition is None:
+            upd = _stage_local(model_cfg, fl_cfg, meta, down["w_mixed"],
+                               a_m, a_v, a_t, data, local_keys)
+        else:
+            # LocalUpdate only for this process's contiguous cohort-position
+            # block; the blocks reassemble by pure movement (allgather)
+            from repro.launch.distributed import allgather_blocks
+
+            upd = _stage_local(model_cfg, fl_cfg, meta,
+                               down["w_mixed"][blo:bhi], a_m[blo:bhi],
+                               a_v[blo:bhi], a_t[blo:bhi], data[blo:bhi],
+                               local_keys[blo:bhi])
+            upd = tuple(allgather_blocks([np.asarray(u) for u in upd], S))
+        sub_new, metrics = _stage_up(sub_state, down, upd, fl_cfg, meta,
+                                     policy)
+        if partition is None:
+            store.scatter(cohort, sub_new)
+        else:
+            store.scatter_owned(pos, loc, sub_new)
         server = {k: sub_new[k] for k in server}
 
         loss = float(metrics["train_loss"])

@@ -484,12 +484,15 @@ def sample_cohort(key, num_clients: int, size: int):
     return jax.random.permutation(key, num_clients)[:size]
 
 
-def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
-    """One global FL iteration over the clients present in ``state`` — the
-    full fleet, or a gathered cohort under participation sampling (the client
-    count comes from the state's leading axis, NOT ``fl_cfg.num_clients``).
-    data: (K, n_win, L+T) materialized windows or (K, T) raw series
-    (``streaming_windows``) — see :func:`_local_update`."""
+def _round_down(state, key, fl_cfg, meta, policy):
+    """Stage 1/3 of a round: client selection, downlink gates, wire payload
+    and the downlink mix — everything :func:`_round_body` computes BEFORE
+    LocalUpdate. Split out so the multi-process host driver
+    (``repro.core.fl.client_store``) can run it replicated on every process
+    while sharding only the LocalUpdate stage; composed inline by
+    :func:`_round_body`, so single- and multi-process rounds share one
+    definition of the math (staged == fused bitwise on the pinned CPU
+    toolchain, guarded in tests/test_distributed.py)."""
     K = state["w_clients"].shape[0]
     k_sel, k_smask, k_fmask, k_upmask, k_local = jax.random.split(key, 5)
 
@@ -499,6 +502,8 @@ def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
     gates = policy.downlink_gates(
         (k_smask, k_fmask), state["w_global"], state["w_clients"], selected)
 
+    down = {"selected": selected, "gates": gates,
+            "k_upmask": k_upmask, "k_local": k_local}
     if fl_cfg.comm_bits == 8:
         # int8 + per-leaf scale downlink payload: the server quantizes ONE
         # w_global payload; every receiver dequantizes the same ints+scales.
@@ -506,6 +511,7 @@ def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
         # without disturbing the split chain): nearest-rounding is biased and
         # stalls training once updates drop below half a quantization step.
         k_wire = jax.random.fold_in(key, 8)
+        down["k_wire"] = k_wire
         w_wire = quantize_wire_vec(state["w_global"], meta, 8,
                                    key=jax.random.fold_in(k_wire, 0))
     elif fl_cfg.comm_bits < 32:
@@ -518,14 +524,23 @@ def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
                   and getattr(policy, "granularity", "element") == "element")
     w_mixed, n_down = mix_down_count(state["w_clients"], w_wire, gates,
                                      use_pallas=use_pallas)
-    comm_down = state["comm_down"] + n_down
+    down["w_mixed"] = w_mixed
+    down["comm_down"] = state["comm_down"] + n_down
+    return down
 
-    # ---- LocalUpdate -------------------------------------------------------
+
+def _round_up(state, down, upd, fl_cfg, meta, policy):
+    """Stage 3/3 of a round: fold the LocalUpdate results back into the
+    client rows, uplink gates + wire quantization, aggregation and comm
+    accounting. ``down`` is :func:`_round_down`'s output; ``upd`` the
+    ``(w_new, m_new, v_new, t_new, losses)`` tuple from
+    :func:`_local_update_all` (possibly reassembled from per-process
+    blocks)."""
+    K = state["w_clients"].shape[0]
+    selected = down["selected"]
+    w_mixed = down["w_mixed"]
+    comm_down = down["comm_down"]
     trains = policy.train_mask(selected)
-
-    local_keys = jax.random.split(k_local, K)
-    upd = _local_update_all(model_cfg, fl_cfg, meta, w_mixed, state["adam_m"],
-                            state["adam_v"], state["adam_t"], data, local_keys)
     w_new, m_new, v_new, t_new, losses = upd
 
     tr = trains[:, None].astype(jnp.float32)
@@ -535,11 +550,13 @@ def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
     adam_t = jnp.where(trains, t_new, state["adam_t"])
 
     # ---- uplink + aggregation (eq. 5; eq. 3 when S' == I) ------------------
-    up_masks = policy.uplink_gates(k_upmask, state["w_global"], w_clients, selected)
+    up_masks = policy.uplink_gates(down["k_upmask"], state["w_global"],
+                                   w_clients, selected)
 
     if fl_cfg.comm_bits == 8:
         # each uploader quantizes its OWN row (per-client per-leaf scales)
         # under its own stochastic-rounding key
+        k_wire = down["k_wire"]
         w_clients_wire = jax.vmap(
             lambda i, row: quantize_wire_vec(
                 row, meta, 8, key=jax.random.fold_in(k_wire, 1 + i))
@@ -574,12 +591,34 @@ def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
         # payload, for each client with any gated element that direction.
         n_leaves = float(len(meta.sizes))
         scales = (state["comm_scales"]
-                  + n_leaves * wire_scale_count(gates)
+                  + n_leaves * wire_scale_count(down["gates"])
                   + n_leaves * wire_scale_count(up_masks))
         new_state["comm_scales"] = scales
         metrics["comm_scales"] = scales
         metrics["comm_bytes"] = metrics["comm_bytes"] + scales * 4.0
     return new_state, metrics
+
+
+def _round_body(state, data, key, model_cfg, fl_cfg, meta, policy):
+    """One global FL iteration over the clients present in ``state`` — the
+    full fleet, or a gathered cohort under participation sampling (the client
+    count comes from the state's leading axis, NOT ``fl_cfg.num_clients``).
+    data: (K, n_win, L+T) materialized windows or (K, T) raw series
+    (``streaming_windows``) — see :func:`_local_update`.
+
+    Composed from :func:`_round_down` (selection/gates/mix), the vmapped
+    :func:`_local_update_all`, and :func:`_round_up` (merge/uplink/
+    aggregate) — pure function composition, so this traces to the exact
+    jaxpr the pre-split body produced. The multi-process host driver runs
+    the same three stages as separate dispatches with only the LocalUpdate
+    block sharded (see ``repro.core.fl.client_store``)."""
+    K = state["w_clients"].shape[0]
+    down = _round_down(state, key, fl_cfg, meta, policy)
+    local_keys = jax.random.split(down["k_local"], K)
+    upd = _local_update_all(model_cfg, fl_cfg, meta, down["w_mixed"],
+                            state["adam_m"], state["adam_v"], state["adam_t"],
+                            data, local_keys)
+    return _round_up(state, down, upd, fl_cfg, meta, policy)
 
 
 _CLIENT_AXIS_KEYS = ("w_clients", "adam_m", "adam_v", "adam_t")
@@ -815,28 +854,31 @@ def axis0_shardings(mesh_axis: str = "clients", mesh=None):
     the same layout to each inference bucket's batch axis (with the serving
     mesh from ``repro.launch.mesh.make_batch_mesh``).
     """
-    devices = jax.devices()
-    if len(devices) <= 1:
-        return None
+    if mesh is None:
+        devices = jax.devices()
+        if len(devices) <= 1:
+            return None
+        mesh = jax.make_mesh((len(devices),), (mesh_axis,))
     from jax.sharding import NamedSharding, PartitionSpec
 
-    if mesh is None:
-        mesh = jax.make_mesh((len(devices),), (mesh_axis,))
     return (NamedSharding(mesh, PartitionSpec(mesh_axis)),
             NamedSharding(mesh, PartitionSpec()))
 
 
-def client_state_shardings(state, mesh_axis: str = "clients"):
+def client_state_shardings(state, mesh_axis: str = "clients", mesh=None):
     """NamedSharding tree for the FL state: client-axis ``(K, ...)`` leaves
-    sharded N-way along axis 0 across the N local devices, server-side
-    scalars/vectors replicated. Returns ``None`` on a single device. Leaves
-    whose client axis does not divide N stay replicated.
+    sharded N-way along axis 0 across the N local devices — or across an
+    explicit 1-D ``mesh`` (``launch.mesh.make_client_mesh(multi_host=True)``
+    spans the whole ``jax.distributed`` cluster) — server-side
+    scalars/vectors replicated. Returns ``None`` on a single device with no
+    explicit mesh. Leaves whose client axis does not divide N stay
+    replicated.
 
     The while driver passes this tree as ``in_shardings`` on its donated
     carry, so the fully-compiled run keeps the client axis distributed
     end-to-end instead of gathering it on dispatch.
     """
-    pair = axis0_shardings(mesh_axis)
+    pair = axis0_shardings(mesh_axis, mesh=mesh)
     if pair is None:
         return None
     sharded, replicated = pair
@@ -876,6 +918,7 @@ def run_fl(
     driver: str = "scan",
     policy=None,
     shard_clients: bool = False,
+    client_mesh=None,
     checkpoint_dir: Optional[str] = None,
     init_params=None,
 ):
@@ -946,6 +989,11 @@ def run_fl(
     """
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    if client_mesh is not None and driver not in ("while", "scan"):
+        raise ValueError(
+            f"client_mesh applies to driver='while'|'scan' (got {driver!r}); "
+            f"driver='host' spans processes through the ClientStore's own "
+            f"partition mode (automatic under jax.distributed)")
     if driver == "host":
         # host-resident client store: dispatched before any (K, D) device
         # allocation happens — that residency is exactly what it avoids
@@ -975,7 +1023,38 @@ def run_fl(
     key, init_key = jax.random.split(key)
     state, meta = init_fl_state(model_cfg, fl_cfg, init_key,
                                 init_params=init_params)
-    if shard_clients:
+    shardings = None
+    multihost = False
+    if client_mesh is not None:
+        # explicit (possibly multi-host) 1-D client mesh: every process runs
+        # this same program (SPMD); init_fl_state is deterministic from the
+        # shared key, so each process holds an identical host-side state and
+        # we assemble per-process GLOBAL arrays from it — each process's
+        # devices carry only their own client-axis rows
+        shard_clients = True
+        multihost = len({d.process_index
+                         for d in client_mesh.devices.flat}) > 1
+        shardings = client_state_shardings(state, mesh=client_mesh)
+        if multihost:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            from repro.launch.distributed import host_to_global, is_main
+
+            rep = NamedSharding(client_mesh, PartitionSpec())
+            ndev = client_mesh.devices.size
+            data_sh = (NamedSharding(client_mesh, PartitionSpec("clients"))
+                       if train_data.shape[0] % ndev == 0 else rep)
+            state = {k: host_to_global(np.asarray(v), shardings[k])
+                     for k, v in state.items()}
+            train_data = host_to_global(np.asarray(train_data), data_sh)
+            test_data = host_to_global(np.asarray(test_data), rep)
+            key = host_to_global(np.asarray(key), rep)
+            if checkpoint_dir is not None and not is_main():
+                checkpoint_dir = None   # process 0 owns the checkpoint write
+        else:
+            state = {k: jax.device_put(v, shardings[k])
+                     for k, v in state.items()}
+    elif shard_clients:
         state = shard_client_state(state)
 
     history = {"round": [], "train_loss": [], "comm": [], "rmse": []}
@@ -1038,7 +1117,8 @@ def run_fl(
                 print(f"round {r - 1:4d}  loss {losses[-1]:.4f}  "
                       f"rmse {rmse:.4f}  comm {comm_total:.3e}")
     elif driver == "while":
-        shardings = client_state_shardings(state) if shard_clients else None
+        if shardings is None and shard_clients and client_mesh is None:
+            shardings = client_state_shardings(state)
         if shardings is None:
             fn = _run_while_jit
         else:
@@ -1052,7 +1132,8 @@ def run_fl(
                          if train_data.shape[0] % ndev == 0
                          else PartitionSpec())
             data_sh = NamedSharding(mesh, data_spec)
-            train_data = jax.device_put(train_data, data_sh)
+            if not multihost:   # multihost train_data is already global
+                train_data = jax.device_put(train_data, data_sh)
             fn = jax.jit(_run_while_impl, static_argnames=_WHILE_STATICS,
                          donate_argnames=("state",),
                          in_shardings=(shardings, None, data_sh, None))
@@ -1060,6 +1141,14 @@ def run_fl(
         out = fn(state, key, train_data, test_data, model_cfg, fl_cfg, meta,
                  policy, max_rounds, eval_every, patience)
         state, key, loss_buf, comm_buf, rmse_buf, rounds_dev, chunks_dev = out
+        if multihost:
+            # gather the run-level history to every host ONCE at run end (the
+            # per-round loop stays collective-free beyond the round math)
+            from repro.launch.distributed import fetch
+
+            loss_buf, comm_buf, rmse_buf, rounds_dev, chunks_dev = (
+                fetch(loss_buf), fetch(comm_buf), fetch(rmse_buf),
+                fetch(rounds_dev), fetch(chunks_dev))
         rounds_run = int(rounds_dev)      # the ONE host sync of the whole run
         chunks_run = int(chunks_dev)
         losses = np.asarray(loss_buf)[:rounds_run]

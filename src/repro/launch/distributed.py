@@ -1,0 +1,478 @@
+"""Multi-host launch path: ``jax.distributed`` init + exact cross-process
+exchange primitives for the FL engine and the serving fleet.
+
+One process per host (ROADMAP item 1(c)): :func:`initialize_distributed`
+wires the process into a ``jax.distributed`` cluster — coordinator address,
+process id and process count come from explicit arguments or the
+``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` / ``REPRO_PROCESS_ID``
+environment (falling back to jax's own ``JAX_COORDINATOR_ADDRESS`` family),
+and the CPU backend is first-class: collectives flip to the gloo
+implementation so a 2-process run works on plain CPUs (the CI smoke and the
+bitwise subprocess tests run exactly that).
+
+On top of the initialized cluster this module provides the exchange
+primitives the multi-process drivers are built from. They are deliberately
+EXACT — pure data movement, or integer arithmetic on bit patterns — because
+the correctness bar for multi-host training is bitwise identity with the
+single-process run (docs/distributed.md):
+
+  * :func:`process_mesh` — a 1-D ``("proc",)`` mesh with ONE device per
+    process (the exchange lane; independent of how many local devices each
+    process has);
+  * :func:`host_to_global` — a process-spanning global ``jax.Array`` built
+    from each process's host copy via
+    ``jax.make_array_from_single_device_arrays``;
+  * :func:`merge_disjoint` — exact reconstruction of a row-partitioned
+    matrix: every process contributes the full-shape array with zeros
+    outside its owned rows, float payloads are BITCAST to int32 and summed
+    across processes (disjoint support -> the integer sum is pure bit
+    transport: no ``-0.0 + 0.0`` normalization, no rounding, no order
+    sensitivity), and the result is bitcast back;
+  * :func:`allgather_blocks` — concatenate equal per-process row blocks in
+    process order (pure movement through a replicated jit identity);
+  * :func:`fetch` — the full host value of any (possibly process-sharded)
+    global array.
+
+``python -m repro.launch.distributed --smoke`` is the self-contained CI
+entry: the parent spawns ``--num-processes`` children of itself, each child
+initializes the cluster, runs a tiny ``run_fl`` both single-process-
+equivalent and process-partitioned, routes a forecast through a
+process-sharded ``ForecastServer`` pair, and the parent asserts the bitwise
+claims from the children's JSON reports.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+from contextlib import closing
+from functools import lru_cache
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+ENV_COORDINATOR = "REPRO_COORDINATOR"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+
+_initialized = False
+
+
+def _env_int(name: str, jax_name: str, default: Optional[int]) -> Optional[int]:
+    for key in (name, jax_name):
+        val = os.environ.get(key)
+        if val:
+            return int(val)
+    return default
+
+
+def initialize_distributed(coordinator_address: Optional[str] = None,
+                           num_processes: Optional[int] = None,
+                           process_id: Optional[int] = None) -> bool:
+    """Join the ``jax.distributed`` cluster described by the arguments or the
+    environment (``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` /
+    ``REPRO_PROCESS_ID``, falling back to ``JAX_COORDINATOR_ADDRESS`` /
+    ``JAX_NUM_PROCESSES`` / ``JAX_PROCESS_ID``). Returns True when the
+    process is part of a multi-process cluster, False for the single-process
+    no-op (no coordinator configured, or ``num_processes <= 1``) — so every
+    launcher can call this unconditionally.
+
+    CPU-backend friendly: cross-process collectives are flipped to the gloo
+    implementation BEFORE the backend initializes, so plain-CPU multi-host
+    runs (tests, CI, laptops) work out of the box. Idempotent: a second call
+    on an initialized cluster is a no-op returning True."""
+    global _initialized
+    coordinator_address = (coordinator_address
+                           or os.environ.get(ENV_COORDINATOR)
+                           or os.environ.get("JAX_COORDINATOR_ADDRESS"))
+    num_processes = (num_processes if num_processes is not None
+                     else _env_int(ENV_NUM_PROCESSES, "JAX_NUM_PROCESSES", None))
+    process_id = (process_id if process_id is not None
+                  else _env_int(ENV_PROCESS_ID, "JAX_PROCESS_ID", None))
+    if coordinator_address is None or not num_processes or num_processes <= 1:
+        return False
+    if _initialized:
+        return True
+    import jax
+
+    # must land before backend init; only the CPU backend reads it
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=int(num_processes),
+                               process_id=int(process_id or 0))
+    _initialized = True
+    return True
+
+
+def process_count() -> int:
+    import jax
+
+    return jax.process_count()
+
+
+def process_index() -> int:
+    import jax
+
+    return jax.process_index()
+
+
+def is_main() -> bool:
+    """True on the process that owns run-level side effects (checkpoint
+    writes, benchmark result files): process 0."""
+    return process_index() == 0
+
+
+def block_range(total: int, index: Optional[int] = None,
+                count: Optional[int] = None) -> Tuple[int, int]:
+    """The contiguous ``[lo, hi)`` row block of ``total`` rows owned by
+    process ``index`` out of ``count`` — the ONE ownership convention every
+    partitioned structure (client store, series, eval chunks) uses."""
+    count = process_count() if count is None else count
+    index = process_index() if index is None else index
+    return (total * index) // count, (total * (index + 1)) // count
+
+
+@lru_cache(maxsize=None)
+def process_mesh():
+    """1-D ``("proc",)`` mesh with exactly ONE device per process (each
+    process's first local device) — the exchange lane for
+    :func:`merge_disjoint` / :func:`allgather_blocks`, independent of the
+    per-process local device count."""
+    import jax
+    from jax.sharding import Mesh
+
+    by_proc = {}
+    for d in jax.devices():
+        by_proc.setdefault(d.process_index, d)
+    devs = [by_proc[p] for p in sorted(by_proc)]
+    return Mesh(np.array(devs), ("proc",))
+
+
+def _proc_shardings():
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh = process_mesh()
+    return (NamedSharding(mesh, PartitionSpec("proc")),
+            NamedSharding(mesh, PartitionSpec()))
+
+
+def host_to_global(x, sharding):
+    """A global (process-spanning) ``jax.Array`` from each process's host
+    copy of the FULL value: the addressable shards are sliced out of the
+    host copy and assembled with
+    ``jax.make_array_from_single_device_arrays``. Every process must pass a
+    value with identical shape/dtype (and, for replicated shardings,
+    identical contents)."""
+    import jax
+
+    x = np.asarray(x)
+    shards = [
+        jax.device_put(x[idx], d)
+        for d, idx in sharding.addressable_devices_indices_map(x.shape).items()
+    ]
+    return jax.make_array_from_single_device_arrays(x.shape, sharding, shards)
+
+
+@lru_cache(maxsize=None)
+def _merge_fn(n_leaves: int):
+    import jax
+    import jax.numpy as jnp
+
+    _, replicated = _proc_shardings()
+    return jax.jit(lambda xs: tuple(jnp.sum(x, axis=0) for x in xs),
+                   out_shardings=replicated)
+
+
+def merge_disjoint(*arrays):
+    """EXACT reconstruction of row-partitioned matrices across processes.
+
+    Each process passes, per array, the FULL-shape numpy value with zeros
+    everywhere outside the rows it owns (ownership must be disjoint and
+    cover every nonzero row). Float payloads are bitcast to int32 so the
+    cross-process sum is integer arithmetic on disjoint supports — pure bit
+    transport, immune to ``-0.0 + 0.0 -> +0.0`` normalization and float
+    summation order. Returns full host numpy arrays, bit-identical on every
+    process to the unpartitioned originals."""
+    import jax
+
+    sharded, _ = _proc_shardings()
+    P = process_mesh().devices.size
+    idx = process_index()
+    ints, casts = [], []
+    for a in arrays:
+        a = np.ascontiguousarray(np.asarray(a))
+        if a.dtype == np.float32:
+            ints.append(a.view(np.int32))
+            casts.append(np.float32)
+        elif a.dtype in (np.int32, np.dtype(np.int32)):
+            ints.append(a)
+            casts.append(None)
+        else:
+            raise TypeError(f"merge_disjoint supports float32/int32 rows, "
+                            f"got {a.dtype}")
+    dev = process_mesh().devices[idx]
+    globals_ = []
+    for a in ints:
+        shape = (P,) + a.shape
+        shard = jax.device_put(a[None], dev)
+        globals_.append(jax.make_array_from_single_device_arrays(
+            shape, sharded, [shard]))
+    out = _merge_fn(len(globals_))(tuple(globals_))
+    host = []
+    for o, cast in zip(out, casts):
+        o = np.asarray(o)
+        host.append(o.view(cast) if cast is not None else o)
+    return host[0] if len(host) == 1 else host
+
+
+@lru_cache(maxsize=None)
+def _gather_fn(n_leaves: int):
+    import jax
+
+    _, replicated = _proc_shardings()
+    return jax.jit(lambda xs: xs, out_shardings=replicated)
+
+
+def allgather_blocks(blocks, total_rows: int):
+    """Concatenate EQUAL per-process row blocks in process order: process p
+    passes its ``(total_rows / P, ...)`` block (host numpy), every process
+    receives the full ``(total_rows, ...)`` arrays. Pure data movement
+    through a replicated jit identity — bitwise-exact, no arithmetic.
+    ``total_rows`` must divide evenly across processes."""
+    import jax
+
+    single = not isinstance(blocks, (list, tuple))
+    if single:
+        blocks = [blocks]
+    mesh = process_mesh()
+    P = mesh.devices.size
+    if total_rows % P:
+        raise ValueError(f"allgather_blocks needs total_rows divisible by "
+                         f"the process count, got {total_rows} over {P}")
+    sharded, _ = _proc_shardings()
+    dev = mesh.devices[process_index()]
+    globals_ = []
+    for b in blocks:
+        b = np.ascontiguousarray(np.asarray(b))
+        if b.shape[0] != total_rows // P:
+            raise ValueError(f"block has {b.shape[0]} rows, expected "
+                             f"{total_rows // P} (= {total_rows} / {P})")
+        shape = (total_rows,) + b.shape[1:]
+        shard = jax.device_put(b, dev)
+        globals_.append(jax.make_array_from_single_device_arrays(
+            shape, sharded, [shard]))
+    out = [np.asarray(o) for o in _gather_fn(len(globals_))(tuple(globals_))]
+    return out[0] if single else out
+
+
+def fetch(x):
+    """Full host value of any array — including process-sharded global
+    arrays, which are first replicated through a jit identity (pure
+    movement)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    if not isinstance(x, jax.Array) or x.is_fully_addressable:
+        return np.asarray(x)
+    if not x.is_fully_replicated:
+        rep = NamedSharding(x.sharding.mesh, PartitionSpec())
+        x = jax.jit(lambda a: a, out_shardings=rep)(x)
+    return np.asarray(x)
+
+
+def sync(tag: str = "repro"):
+    """Barrier across all processes (no-op single-process)."""
+    if process_count() <= 1:
+        return
+    from jax.experimental import multihost_utils
+
+    multihost_utils.sync_global_devices(tag)
+
+
+def client_axis_sharding(mesh, axis: str = "clients"):
+    """The FL client-axis layout over a (possibly multi-host) client mesh,
+    derived from the shared logical-axis rule table
+    (``repro.sharding.rules.make_rules(mode="fl")``): ``(sharded,
+    replicated)`` NamedSharding pair for ``(clients, ...)`` leaves vs
+    server-side state."""
+    from jax.sharding import NamedSharding
+
+    from repro.sharding.rules import logical_to_spec, make_rules
+
+    rules = make_rules(mesh, mode="fl",
+                       overrides={"clients": axis} if axis != "clients"
+                       else None)
+    spec_sharded, spec_rep = logical_to_spec(
+        [("clients", None), (None,)], rules)
+    return (NamedSharding(mesh, spec_sharded), NamedSharding(mesh, spec_rep))
+
+
+# ---------------------------------------------------------------------------
+# CLI: multi-process launcher + the CI smoke
+# ---------------------------------------------------------------------------
+
+
+def _free_port() -> int:
+    with closing(socket.socket(socket.AF_INET, socket.SOCK_STREAM)) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def spawn_processes(num_processes: int, argv: Sequence[str],
+                    env: Optional[dict] = None, timeout: float = 900.0):
+    """Launch ``num_processes`` copies of ``argv`` wired into one
+    ``jax.distributed`` cluster (coordinator on a free localhost port, the
+    ``REPRO_*`` env triplet set per child). Returns the list of completed
+    ``subprocess.CompletedProcess`` — the caller asserts exit codes and
+    parses stdout."""
+    port = _free_port()
+    base = dict(os.environ if env is None else env)
+    base[ENV_COORDINATOR] = f"127.0.0.1:{port}"
+    base[ENV_NUM_PROCESSES] = str(num_processes)
+    procs = []
+    for p in range(num_processes):
+        child_env = dict(base)
+        child_env[ENV_PROCESS_ID] = str(p)
+        procs.append(subprocess.Popen(
+            list(argv), env=child_env, stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE, text=True))
+    done = []
+    for proc in procs:
+        try:
+            out, err = proc.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            for p2 in procs:
+                p2.kill()
+            raise
+        done.append(subprocess.CompletedProcess(proc.args, proc.returncode,
+                                                out, err))
+    return done
+
+
+def _smoke_child() -> dict:
+    """One child of the CI smoke: tiny 2-process FL runs (host partition +
+    device mesh) and a routed forecast through a process-sharded server
+    pair. Prints nothing — the dict is the report."""
+    import hashlib
+    import tempfile
+
+    import jax
+
+    initialize_distributed()
+    from repro.core.fl.engine import FLConfig, run_fl
+    from repro.data.synthetic import nn5_synthetic
+    from repro.data.windowing import client_series_datasets
+
+    K, S, rounds = 8, 4, 4
+    series = nn5_synthetic(seed=0, num_clients=K, num_days=120)
+    tr, va, te, _ = client_series_datasets(series, 16, 2)
+    fl_cfg = FLConfig(policy="psgf", num_clients=K, local_steps=1,
+                      batch_size=4, streaming_windows=True, participation=S)
+    from repro.core.forecaster import get_forecaster, save_forecaster
+
+    fc = get_forecaster("logtst", look_back=16, horizon=2, d_model=8,
+                        num_heads=2, d_ff=8, patch_len=8, stride=4)
+    hist = run_fl(fc.cfg, fl_cfg, tr, te, jax.random.PRNGKey(0),
+                  max_rounds=rounds, patience=rounds + 1, eval_every=rounds,
+                  driver="host")
+    digest = hashlib.sha256(
+        np.asarray(hist["state"]["w_global"]).tobytes()).hexdigest()
+
+    # routed serving through a process-sharded server: each process restores
+    # only its owned clusters; the two-phase swap is exercised in the tests —
+    # the smoke proves restore + routing + /metricz shard gauges end-to-end
+    from repro.launch.serve_forecast import ForecastServer
+
+    idx, n = process_index(), process_count()
+    root = os.environ.get("REPRO_SMOKE_DIR") or tempfile.mkdtemp()
+    if idx == 0:
+        params = fc.init_params(jax.random.PRNGKey(1))
+        subs = {}
+        for c in range(2):
+            sub = f"smoke_c{c}"
+            save_forecaster(os.path.join(root, sub), fc, params, step=1)
+            subs[str(c)] = sub
+        with open(os.path.join(root, "routing.json"), "w") as f:
+            json.dump({"generation": 0, "task": "smoke", "model": fc.name,
+                       "look_back": 16, "horizon": 2, "clusters": 2,
+                       "station_cluster": [0, 1, 0, 1],
+                       "policies": {"psgf": subs}}, f)
+    sync("smoke-manifest")
+    server = ForecastServer.from_manifest(root, process_shard=(idx, n))
+    owned = sorted(server.engines)
+    served = None
+    if owned:
+        x = np.zeros((1, 1, 16), np.float32)
+        y = server.predict(x, cluster=owned[0])
+        served = list(map(int, y.shape))
+    metrics = server.metrics_text()
+    server.close()
+    return {
+        "process": idx,
+        "num_processes": n,
+        "loss0": hist["train_loss"][0],
+        "losses": hist["train_loss"],
+        "final_rmse": hist["final_rmse"],
+        "w_global_sha": digest,
+        "owned_clusters": owned,
+        "served_shape": served,
+        "shard_gauges": ("forecast_process_index" in metrics
+                         and "forecast_process_count" in metrics),
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="jax.distributed multi-process launcher / CI smoke")
+    ap.add_argument("--smoke", action="store_true",
+                    help="parent mode: spawn --num-processes children of "
+                         "this module, assert their reports agree bitwise")
+    ap.add_argument("--smoke-child", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--num-processes", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    if args.smoke_child:
+        print(json.dumps(_smoke_child()))
+        return 0
+
+    if not args.smoke:
+        ap.error("pass --smoke (the only parent-mode action)")
+    import tempfile
+
+    smoke_dir = tempfile.mkdtemp(prefix="repro-dist-smoke-")
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["REPRO_SMOKE_DIR"] = smoke_dir
+    procs = spawn_processes(
+        args.num_processes,
+        [sys.executable, "-m", "repro.launch.distributed", "--smoke-child"],
+        env=env)
+    reports = []
+    for i, r in enumerate(procs):
+        if r.returncode != 0:
+            sys.stderr.write(f"--- child {i} stderr ---\n{r.stderr[-4000:]}\n")
+            raise SystemExit(f"smoke child {i} exited {r.returncode}")
+        reports.append(json.loads(r.stdout.strip().splitlines()[-1]))
+    r0 = reports[0]
+    for r in reports[1:]:
+        assert r["losses"] == r0["losses"], "per-round losses diverged"
+        assert r["w_global_sha"] == r0["w_global_sha"], "w_global diverged"
+        assert r["final_rmse"] == r0["final_rmse"], "RMSE diverged"
+    all_owned = sorted(c for r in reports for c in r["owned_clusters"])
+    assert all_owned == [0, 1], f"cluster shards wrong: {all_owned}"
+    assert all(r["shard_gauges"] for r in reports)
+    assert all(r["served_shape"] == [1, 1, 2]
+               for r in reports if r["owned_clusters"])
+    print(f"distributed smoke OK: {args.num_processes} processes, "
+          f"losses/w_global/rmse bitwise-agreed, clusters {all_owned} "
+          f"sharded across processes")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

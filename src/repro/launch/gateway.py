@@ -368,6 +368,7 @@ class ForecastGateway:
                 "status": "draining" if self._draining else "ok",
                 "clusters": len(self.server.engines),
                 "generation": getattr(self.server, "generation", None),
+                "process_shard": getattr(self.server, "process_shard", None),
                 "pending": self._pending,
             }, route="healthz")
         if path == "/metricz" and method == "GET":

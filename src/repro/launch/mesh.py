@@ -33,6 +33,24 @@ def make_batch_mesh(axis: str = "batch"):
     return _make_mesh((len(jax.devices()),), (axis,))
 
 
+def make_client_mesh(axis: str = "clients", *, multi_host: bool = False):
+    """1-D FL client mesh: the axis ``run_fl(shard_clients=True)`` and
+    ``engine.client_state_shardings`` put the (K, D) client-state rows on.
+
+    Default (``multi_host=False``): THIS process's local devices only — the
+    single-host sharding path, identical to the mesh the engine builds
+    internally. ``multi_host=True``: every device of the ``jax.distributed``
+    cluster in process order (``launch.distributed.initialize_distributed``
+    must have run first), so each process holds only its own row block of
+    the client state and ``run_fl(driver="while"|"scan")`` spans hosts."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = (sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+               if multi_host else list(jax.local_devices()))
+    return Mesh(np.asarray(devices), (axis,))
+
+
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests/examples on CPU)."""
     n = len(jax.devices())

@@ -268,7 +268,16 @@ class ForecastServer:
                  station_norm: Optional[Tuple] = None,
                  shard_batch: bool = False,
                  metrics: bool = True,
-                 generation: int = 0):
+                 generation: int = 0,
+                 process_shard: Optional[Tuple[int, int]] = None):
+        if process_shard is not None:
+            idx, cnt = int(process_shard[0]), int(process_shard[1])
+            if not (cnt >= 1 and 0 <= idx < cnt):
+                raise ValueError(
+                    f"process_shard must be (index, count) with "
+                    f"0 <= index < count, got {process_shard}")
+            process_shard = (idx, cnt)
+        self.process_shard = process_shard
         if models is None:
             if forecaster is None or params is None:
                 raise ValueError("pass (forecaster, params) or models=")
@@ -289,6 +298,10 @@ class ForecastServer:
             station_cluster=station_cluster, station_norm=station_norm)
         self._manifest_source: Optional[dict] = None  # set by from_manifest
         self._reload_lock = threading.Lock()   # serializes builds + swaps
+        # two-phase swap state (process-sharded serving): the built-and-warmed
+        # next generation this process has announced but not yet published,
+        # kept across reload() ticks so waiting on peers never rebuilds it
+        self._staged_gen: Optional[_Generation] = None
         self._watch_thread: Optional[threading.Thread] = None
         self._watch_stop: Optional[threading.Event] = None
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
@@ -380,9 +393,16 @@ class ForecastServer:
         m.gauge("forecast_generation",
                 "active routing-manifest generation",
                 fn=lambda: float(self._gen.generation))
+        if self.process_shard is not None:
+            m.gauge("forecast_process_index",
+                    "this server's shard index (process-sharded serving)",
+                    fn=lambda: float(self.process_shard[0]))
+            m.gauge("forecast_process_count",
+                    "total serving processes the cluster set is sharded over",
+                    fn=lambda: float(self.process_shard[1]))
         self._m_reloads = m.counter(
             "forecast_reloads_total",
-            "manifest hot-swaps by outcome (swapped/stale/error)",
+            "manifest hot-swaps by outcome (swapped/stale/waiting/error)",
             ("outcome",))
 
     def metrics_text(self) -> str:
@@ -403,7 +423,9 @@ class ForecastServer:
     @classmethod
     def from_manifest(cls, ckpt_root: str, policy: Optional[str] = None,
                       step: Optional[int] = None, comm_bits: int = 32,
-                      denormalize: bool = False, **kw) -> "ForecastServer":
+                      denormalize: bool = False,
+                      process_shard: Optional[Tuple[int, int]] = None,
+                      **kw) -> "ForecastServer":
         """ROUTED server from ``run_experiment``'s routing manifest: restores
         every cluster checkpoint of ``policy`` (the manifest's only policy by
         default) and routes requests via its ``station_cluster`` table.
@@ -419,7 +441,19 @@ class ForecastServer:
         latest complete generation wins) and the restore source is recorded,
         so :meth:`reload` / :meth:`watch_manifest` can later hot-swap the
         server to a newer generation with the same policy/step/quantization
-        settings."""
+        settings.
+
+        ``process_shard=(index, count)`` builds one member of a
+        PROCESS-SHARDED serving fleet (see docs/distributed.md): the manifest's
+        sorted cluster labels are dealt round-robin across ``count`` processes
+        and this server restores ONLY the clusters at positions
+        ``i % count == index`` — each process holds 1/count of the model
+        memory while the full routing table stays replicated, so an unowned
+        station fails fast with a routing KeyError instead of silently
+        serving the wrong model. :meth:`reload` then coordinates
+        generation swaps across the fleet with a two-phase publish (every
+        process warms the new generation and announces a ready marker in the
+        manifest dir before ANY process serves it)."""
         from repro.core.tasks import read_routing_manifest
 
         generation, manifest = read_routing_manifest(ckpt_root)
@@ -429,13 +463,14 @@ class ForecastServer:
                 "re-run run_experiment(checkpoint_dir=...) to record "
                 "per-station normalization")
         policy, models, sources = cls._restore_generation(
-            ckpt_root, manifest, policy, step, comm_bits)
+            ckpt_root, manifest, policy, step, comm_bits,
+            process_shard=process_shard)
         if denormalize:
             kw["station_norm"] = (manifest["norm"]["mu"],
                                   manifest["norm"]["sd"])
         server = cls(models=models,
                      station_cluster=manifest["station_cluster"],
-                     generation=generation, **kw)
+                     generation=generation, process_shard=process_shard, **kw)
         server._gen.sources = sources
         server._manifest_source = dict(root=ckpt_root, policy=policy,
                                        step=step, comm_bits=comm_bits,
@@ -446,12 +481,15 @@ class ForecastServer:
     def _restore_generation(ckpt_root: str, manifest: dict,
                             policy: Optional[str], step: Optional[int],
                             comm_bits: int,
-                            reuse: Optional[Dict] = None):
+                            reuse: Optional[Dict] = None,
+                            process_shard: Optional[Tuple[int, int]] = None):
         """Resolve the policy and restore its cluster checkpoints. With
         ``reuse`` (cluster -> (subdir, engine) of the LIVE generation),
         clusters whose checkpoint subdir is unchanged keep their existing
         engine object — a per-cluster retrain restores only the retrained
-        cluster. Returns ``(policy, models_or_engines, sources)``."""
+        cluster. With ``process_shard=(index, count)`` only the OWNED
+        clusters (position ``i % count == index`` in sorted label order) are
+        restored. Returns ``(policy, models_or_engines, sources)``."""
         policies = manifest["policies"]
         if policy is None:
             if len(policies) != 1:
@@ -462,8 +500,10 @@ class ForecastServer:
             raise KeyError(f"unknown policy {policy!r}; "
                            f"manifest has {sorted(policies)}")
         out, sources = {}, {}
-        for label, sub in sorted(policies[policy].items(),
-                                 key=lambda kv: int(kv[0])):
+        entries = sorted(policies[policy].items(), key=lambda kv: int(kv[0]))
+        for i, (label, sub) in enumerate(entries):
+            if process_shard is not None and i % process_shard[1] != process_shard[0]:
+                continue   # owned by another process of the serving fleet
             c = int(label)
             sources[c] = sub
             if reuse is not None and reuse.get(c, (None,))[0] == sub:
@@ -475,7 +515,16 @@ class ForecastServer:
         return policy, out, sources
 
     # --- manifest hot-swap ------------------------------------------------
-    def reload(self, warm_channels: Sequence[int] = (1,)) -> bool:
+    @staticmethod
+    def _ready_marker(root: str, generation: int, index: int) -> str:
+        """Phase-one publish marker of the two-phase process-sharded swap:
+        ``<root>/.ready.g<generation>.p<index>`` announces that process
+        ``index`` has BUILT AND WARMED generation ``generation`` (written via
+        tmp + ``os.replace``, so peers never read a torn marker)."""
+        return os.path.join(root, f".ready.g{generation:06d}.p{index}")
+
+    def reload(self, warm_channels: Sequence[int] = (1,),
+               sync_timeout_s: float = 30.0) -> bool:
         """Hot-swap to the manifest's LATEST COMPLETE GENERATION without
         dropping a single request. Returns True if a newer generation was
         published, False if the on-disk manifest is at (or behind) the
@@ -489,7 +538,20 @@ class ForecastServer:
         happen, as one atomic attribute store. Requests already queued carry
         their old snapshot and drain through the old engines; requests
         admitted after the store route through the new table and engines.
-        Nothing in between is observable."""
+        Nothing in between is observable.
+
+        On a PROCESS-SHARDED server (``from_manifest(process_shard=(i, n))``
+        with n > 1) the swap is TWO-PHASE across the fleet: after building
+        and warming its owned clusters this process announces a ready marker
+        in the manifest dir, then publishes only once ALL n processes'
+        markers for the generation exist — so no process ever serves a
+        generation a peer hasn't warmed (a station rerouted to another shard
+        mid-swap would hit a cold or absent model otherwise). If the peers
+        have not announced within ``sync_timeout_s`` the built generation is
+        KEPT STAGED (no rebuild on the next tick), the outcome is tallied as
+        ``forecast_reloads_total{outcome="waiting"}`` and the server keeps
+        serving the old generation — a crashed or erroring peer delays the
+        fleet's swap but never poisons the processes that are up."""
         src = self._manifest_source
         if src is None:
             raise RuntimeError(
@@ -503,51 +565,90 @@ class ForecastServer:
                 if self.metrics is not None:
                     self._m_reloads.labels("stale").inc()
                 return False
-            try:
-                old = self._gen
-                reuse = {c: (old.sources.get(c), e)
-                         for c, e in old.engines.items()}
-                _, restored, sources = self._restore_generation(
-                    src["root"], manifest, src["policy"], src["step"],
-                    src["comm_bits"], reuse=reuse)
-                engines = {
-                    c: (v if isinstance(v, _ClusterEngine)
-                        else _ClusterEngine(v[0], v[1], self._shardings))
-                    for c, v in restored.items()}
-                station_norm = None
-                if src["denormalize"]:
-                    station_norm = (manifest["norm"]["mu"],
-                                    manifest["norm"]["sd"])
-                new_gen = _Generation(
-                    generation, engines,
-                    station_cluster=manifest["station_cluster"],
-                    station_norm=station_norm, sources=sources)
-                fresh = [c for c, e in engines.items()
-                         if e is not old.engines.get(c)]
-                for ch in warm_channels:
-                    for c in fresh:
-                        L = engines[c].forecaster.cfg.look_back
-                        for b in self.buckets:
-                            self._run_bucket(
-                                np.zeros((b, ch, L), np.float32), c, new_gen)
-            except Exception:
-                if self.metrics is not None:
-                    self._m_reloads.labels("error").inc()
-                raise
+            staged = self._staged_gen
+            if staged is not None and staged.generation == generation:
+                new_gen = staged   # already built and warmed on a prior tick
+            else:
+                try:
+                    old = self._gen
+                    reuse = {c: (old.sources.get(c), e)
+                             for c, e in old.engines.items()}
+                    _, restored, sources = self._restore_generation(
+                        src["root"], manifest, src["policy"], src["step"],
+                        src["comm_bits"], reuse=reuse,
+                        process_shard=self.process_shard)
+                    engines = {
+                        c: (v if isinstance(v, _ClusterEngine)
+                            else _ClusterEngine(v[0], v[1], self._shardings))
+                        for c, v in restored.items()}
+                    station_norm = None
+                    if src["denormalize"]:
+                        station_norm = (manifest["norm"]["mu"],
+                                        manifest["norm"]["sd"])
+                    new_gen = _Generation(
+                        generation, engines,
+                        station_cluster=manifest["station_cluster"],
+                        station_norm=station_norm, sources=sources)
+                    fresh = [c for c, e in engines.items()
+                             if e is not old.engines.get(c)]
+                    for ch in warm_channels:
+                        for c in fresh:
+                            L = engines[c].forecaster.cfg.look_back
+                            for b in self.buckets:
+                                self._run_bucket(
+                                    np.zeros((b, ch, L), np.float32), c,
+                                    new_gen)
+                except Exception:
+                    if self.metrics is not None:
+                        self._m_reloads.labels("error").inc()
+                    raise
+            if self.process_shard is not None and self.process_shard[1] > 1:
+                if not self._announce_and_await(src["root"], generation,
+                                                sync_timeout_s):
+                    self._staged_gen = new_gen   # reuse next tick, no rebuild
+                    if self.metrics is not None:
+                        self._m_reloads.labels("waiting").inc()
+                    return False
             self._gen = new_gen   # THE swap: one atomic attribute store
+            self._staged_gen = None
             self.stats["reloads"] += 1
             if self.metrics is not None:
                 self._m_reloads.labels("swapped").inc()
         return True
 
-    def watch_manifest(self, interval_s: float = 2.0):
+    def _announce_and_await(self, root: str, generation: int,
+                            sync_timeout_s: float) -> bool:
+        """Phase one of the cross-process swap: write THIS process's ready
+        marker for ``generation``, then poll for every peer's. True once all
+        ``count`` markers exist (everyone warmed — safe to publish), False on
+        timeout (keep serving the old generation, retry next tick)."""
+        from repro.checkpoint import atomic_write_bytes
+
+        idx, cnt = self.process_shard
+        atomic_write_bytes(self._ready_marker(root, generation, idx),
+                           json.dumps({"generation": generation,
+                                       "process": idx}).encode())
+        deadline = time.perf_counter() + sync_timeout_s
+        while True:
+            missing = [p for p in range(cnt)
+                       if not os.path.exists(
+                           self._ready_marker(root, generation, p))]
+            if not missing:
+                return True
+            if time.perf_counter() >= deadline:
+                return False
+            time.sleep(min(0.05, sync_timeout_s / 10))
+
+    def watch_manifest(self, interval_s: float = 2.0,
+                       sync_timeout_s: float = 30.0):
         """Background poller: every ``interval_s`` seconds, :meth:`reload`
         if the manifest's generation moved past the active one. The manifest
         writer publishes atomically (snapshot file + ``os.replace``), so the
         poller can never read a torn manifest; transient filesystem/restore
         errors are tallied (``forecast_reloads_total{outcome="error"}``) and
-        retried next tick. Idempotent; stopped by :meth:`unwatch` or
-        :meth:`close`."""
+        retried next tick. On a process-sharded server ``sync_timeout_s`` is
+        forwarded to :meth:`reload`'s two-phase peer wait. Idempotent;
+        stopped by :meth:`unwatch` or :meth:`close`."""
         if self._manifest_source is None:
             raise RuntimeError(
                 "watch_manifest() needs a manifest-backed server "
@@ -559,7 +660,7 @@ class ForecastServer:
         def _poll():
             while not self._watch_stop.wait(interval_s):
                 try:
-                    self.reload()
+                    self.reload(sync_timeout_s=sync_timeout_s)
                 except Exception:
                     pass  # already tallied as outcome="error"; retry next tick
 
@@ -1098,6 +1199,10 @@ def main():
     ap.add_argument("--denormalize", action="store_true",
                     help="serve station-routed requests in RAW units via the "
                          "manifest's per-station norm stats (--manifest only)")
+    ap.add_argument("--process-shard", default=None, metavar="I/N",
+                    help="serve shard I of an N-process fleet: restore only "
+                         "the clusters at sorted positions i %% N == I "
+                         "(--manifest only; e.g. --process-shard 0/2)")
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--channels", type=int, default=3)
     ap.add_argument("--max-batch", type=int, default=32)
@@ -1108,10 +1213,20 @@ def main():
 
     kw = dict(max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
               shard_batch=args.shard_batch)
+    if args.process_shard is not None and not args.manifest:
+        ap.error("--process-shard requires --manifest")
+    process_shard = None
+    if args.process_shard is not None:
+        try:
+            i, n = args.process_shard.split("/")
+            process_shard = (int(i), int(n))
+        except ValueError:
+            ap.error(f"--process-shard wants I/N, got {args.process_shard!r}")
     if args.manifest:
         server = ForecastServer.from_manifest(
             args.manifest, policy=args.policy, step=args.step,
-            comm_bits=args.comm_bits, denormalize=args.denormalize, **kw)
+            comm_bits=args.comm_bits, denormalize=args.denormalize,
+            process_shard=process_shard, **kw)
         stations = server.routable_stations()
         print(f"restored {len(server.engines)} cluster models "
               f"({server.forecaster.name}, {server.forecaster.num_params():,} "

@@ -84,7 +84,27 @@ class ShardingRules:
         return self.mesh.shape[mesh_axis]
 
 
+FL_RULES = {
+    # Federated layout (repro.core.fl.engine / launch.distributed): the
+    # client axis — row 0 of the (K, D) client-state matrices, per-client
+    # RNG keys, per-client training rows — shards over the 1-D "clients"
+    # mesh (launch.mesh.make_client_mesh, single- or multi-host); the
+    # flattened parameter axis and all server-side state stay replicated.
+    "clients": "clients",
+    "params": None,
+}
+
+
 def make_rules(mesh: Mesh, mode: str = "train", overrides: dict | None = None) -> ShardingRules:
+    if mode == "fl":
+        base = dict(FL_RULES)
+        # drop rules whose mesh axis this mesh does not carry
+        for k, v in list(base.items()):
+            if v is not None and v not in mesh.shape:
+                base[k] = None
+        if overrides:
+            base.update(overrides)
+        return ShardingRules(table=base, mesh=mesh)
     base = dict(TRAIN_RULES if mode == "train" else SERVE_RULES)
     # batch shards over every data-like axis present in the mesh.
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,60 @@
+"""Shared subprocess-launch helpers for multi-device / multi-process tests.
+
+Two launch shapes recur across the suite:
+
+  * a SINGLE fresh interpreter with its own XLA flags (virtual-device tests
+    set ``--xla_force_host_platform_device_count`` before jax imports — too
+    late inside a warm pytest process): :func:`run_child_json`;
+  * an N-process ``jax.distributed`` CPU cluster (bitwise multi-host tests,
+    the CI smoke): :func:`run_cluster_json`, built on
+    ``repro.launch.distributed.spawn_processes``.
+
+Both run the child to completion, assert it exited 0 (tail of stderr in the
+failure message) and parse the LAST stdout line as a JSON report — children
+print exactly one ``json.dumps`` at the end.
+"""
+import json
+import os
+import subprocess
+import sys
+
+SRC_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def child_env(extra=None):
+    """A copy of the environment with ``src`` on PYTHONPATH (the children are
+    fresh interpreters — they don't inherit pytest's import path)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if extra:
+        env.update(extra)
+    return env
+
+
+def _parse_report(returncode, stdout, stderr, who="child"):
+    assert returncode == 0, f"{who} failed:\n{stderr[-4000:]}"
+    return json.loads(stdout.strip().splitlines()[-1])
+
+
+def run_child_json(code: str, timeout: float = 600, env: dict | None = None):
+    """``python -c code`` in a fresh interpreter; returns the child's JSON
+    report (last stdout line)."""
+    r = subprocess.run([sys.executable, "-c", code], env=child_env(env),
+                       capture_output=True, text=True, timeout=timeout)
+    return _parse_report(r.returncode, r.stdout, r.stderr)
+
+
+def run_cluster_json(num_processes: int, code: str, timeout: float = 600,
+                     env: dict | None = None):
+    """``python -c code`` in an N-process ``jax.distributed`` CPU cluster
+    (coordinator on a free localhost port); returns the per-process JSON
+    reports in process order."""
+    from repro.launch.distributed import spawn_processes
+
+    env = child_env({"JAX_PLATFORMS": "cpu", **(env or {})})
+    procs = spawn_processes(num_processes, [sys.executable, "-c", code],
+                            env=env, timeout=timeout)
+    return [_parse_report(r.returncode, r.stdout, r.stderr, who=f"child {i}")
+            for i, r in enumerate(procs)]

@@ -1,0 +1,418 @@
+"""Tests for the multi-host launch path (repro/launch/distributed.py).
+
+The correctness bar of the PR 9 tentpole is BITWISE: a 2-process
+``jax.distributed`` CPU cluster must reproduce the single-process run
+exactly — per-round losses, comm counters, RMSE and final weights — for
+both the host-resident partitioned driver and the device-mesh while/scan
+drivers. The cluster tests spawn real child processes
+(``tests/distributed_utils.run_cluster_json``); the single-process
+reference runs in the pytest process with the identical configuration.
+
+The process-sharded serving fleet (``ForecastServer.from_manifest(
+process_shard=...)``) coordinates purely through the filesystem (ready
+markers in the manifest dir), so the two-phase generation swap — including
+its error paths — is tested with two server objects in ONE process.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+from distributed_utils import run_cluster_json
+
+from repro.launch import distributed as D
+
+# ---- single-process units ---------------------------------------------------
+
+
+def test_initialize_noop_without_cluster(monkeypatch):
+    """No coordinator configured -> single-process no-op returning False, so
+    launchers can call it unconditionally."""
+    for var in (D.ENV_COORDINATOR, D.ENV_NUM_PROCESSES, D.ENV_PROCESS_ID,
+                "JAX_COORDINATOR_ADDRESS", "JAX_NUM_PROCESSES"):
+        monkeypatch.delenv(var, raising=False)
+    assert D.initialize_distributed() is False
+    # num_processes <= 1 is also a no-op even with a coordinator address
+    assert D.initialize_distributed("127.0.0.1:1", num_processes=1) is False
+
+
+def test_block_range_partitions_exactly():
+    blocks = [D.block_range(10, index=i, count=4) for i in range(4)]
+    assert blocks[0][0] == 0 and blocks[-1][1] == 10
+    for (_, hi), (lo, _) in zip(blocks, blocks[1:]):
+        assert hi == lo  # contiguous, disjoint, covering
+    assert [hi - lo for lo, hi in blocks] == [2, 3, 2, 3]
+
+
+def test_client_store_partition_validation():
+    from repro.core import forecast
+    from repro.core.fl.client_store import ClientStore
+    from repro.core.fl.engine import FLConfig, init_fl_state
+
+    cfg = forecast.logtst_config(look_back=16, horizon=2, d_model=8,
+                                 num_heads=2, d_ff=8, patch_len=8, stride=4)
+    fl = FLConfig(policy="psgf", num_clients=9, local_steps=1, batch_size=4,
+                  streaming_windows=True)
+    tr = np.zeros((9, 40), np.float32)
+    te = np.zeros((9, 20), np.float32)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="divisible"):
+        ClientStore(cfg, fl, tr, te, key, partition=(0, 2))  # 9 % 2 != 0
+    with pytest.raises(ValueError, match="partition"):
+        ClientStore(cfg, fl, tr, te, key, partition=(2, 2))  # index >= count
+
+
+def test_run_fl_host_partition_rejects_thin_cohorts():
+    """S must split evenly with >= 2 rows per process (batch-1 vmapped rows
+    are not batch-size invariant, so they would break bitwise identity)."""
+    from repro.core import forecast
+    from repro.core.fl.client_store import run_fl_host
+    from repro.core.fl.engine import FLConfig
+
+    cfg = forecast.logtst_config(look_back=16, horizon=2, d_model=8,
+                                 num_heads=2, d_ff=8, patch_len=8, stride=4)
+    tr = np.zeros((8, 40), np.float32)
+    te = np.zeros((8, 20), np.float32)
+    for S in (5, 2):  # odd split / 1-row blocks
+        fl = FLConfig(policy="psgf", num_clients=8, local_steps=1,
+                      batch_size=4, streaming_windows=True, participation=S)
+        with pytest.raises(ValueError, match="participation"):
+            run_fl_host(cfg, fl, tr, te, jax.random.PRNGKey(0), max_rounds=1,
+                        partition=(0, 2))
+
+
+def test_run_fl_rejects_client_mesh_on_host_driver():
+    from repro.core import forecast
+    from repro.core.fl.engine import FLConfig, run_fl
+    from repro.launch.mesh import make_client_mesh
+
+    cfg = forecast.logtst_config(look_back=16, horizon=2, d_model=8,
+                                 num_heads=2, d_ff=8, patch_len=8, stride=4)
+    fl = FLConfig(policy="psgf", num_clients=4, local_steps=1, batch_size=4,
+                  streaming_windows=True)
+    tr = np.zeros((4, 40), np.float32)
+    te = np.zeros((4, 20), np.float32)
+    with pytest.raises(ValueError, match="client_mesh"):
+        run_fl(cfg, fl, tr, te, jax.random.PRNGKey(0), max_rounds=1,
+               driver="host", client_mesh=make_client_mesh())
+
+
+def test_process_shard_validation():
+    from repro.launch.serve_forecast import ForecastServer
+
+    from repro.core.forecaster import get_forecaster
+
+    fc = get_forecaster("logtst", look_back=16, horizon=2, d_model=8,
+                        num_heads=2, d_ff=8, patch_len=8, stride=4)
+    params = fc.init_params(jax.random.PRNGKey(0))
+    for bad in ((2, 2), (-1, 2), (0, 0)):
+        with pytest.raises(ValueError, match="process_shard"):
+            ForecastServer(fc, params, process_shard=bad)
+
+
+# ---- process-sharded serving: restore, routing, two-phase swap --------------
+
+
+def _write_manifest(root, generation, subs):
+    with open(os.path.join(root, "routing.json"), "w") as f:
+        json.dump({"generation": generation, "task": "t", "model": "logtst",
+                   "look_back": 16, "horizon": 2, "clusters": len(subs),
+                   "station_cluster": [0, 1, 0, 1],
+                   "policies": {"psgf": subs}}, f)
+
+
+@pytest.fixture()
+def sharded_pair(tmp_path):
+    """Two process-sharded servers over one hand-built 2-cluster manifest —
+    the fleet coordinates through the filesystem only, so both 'processes'
+    can live in this test process."""
+    from repro.core.forecaster import get_forecaster, save_forecaster
+    from repro.launch.serve_forecast import ForecastServer
+
+    root = str(tmp_path)
+    fc = get_forecaster("logtst", look_back=16, horizon=2, d_model=8,
+                        num_heads=2, d_ff=8, patch_len=8, stride=4)
+    params = fc.init_params(jax.random.PRNGKey(0))
+    for c in (0, 1):
+        save_forecaster(os.path.join(root, f"g0_c{c}"), fc, params, step=1)
+    _write_manifest(root, 0, {"0": "g0_c0", "1": "g0_c1"})
+    servers = [ForecastServer.from_manifest(root, process_shard=(i, 2),
+                                            max_batch=4)
+               for i in range(2)]
+    yield root, servers, fc, params
+    for s in servers:
+        s.close()
+
+
+def test_process_shard_round_robin_restore(sharded_pair):
+    root, (s0, s1), fc, _ = sharded_pair
+    assert sorted(s0.engines) == [0]
+    assert sorted(s1.engines) == [1]
+    # full routing table on every shard; unowned stations fail fast
+    assert s0.station_cluster == [0, 1, 0, 1] == s1.station_cluster
+    assert s0.routable_stations() == [0, 2]
+    assert s1.routable_stations() == [1, 3]
+    y = s0.predict(np.zeros((1, 1, 16), np.float32), station=0)
+    assert y.shape == (1, 1, 2)
+    with pytest.raises(KeyError, match="cluster"):
+        s0.predict(np.zeros((1, 1, 16), np.float32), station=1)
+    for s in (s0, s1):
+        text = s.metrics_text()
+        assert "forecast_process_count 2" in text
+        assert f"forecast_process_index {s.process_shard[0]}" in text
+
+
+def test_two_phase_swap_waits_for_all_processes(sharded_pair):
+    """No process publishes a new generation before EVERY process has warmed
+    it: the first reloader stages + announces, returns False (outcome
+    'waiting') and keeps serving the old generation; once the last process
+    announces, everyone swaps."""
+    root, (s0, s1), fc, params = sharded_pair
+    from repro.core.forecaster import save_forecaster
+
+    for c in (0, 1):
+        save_forecaster(os.path.join(root, f"g1_c{c}"), fc, params, step=1)
+    _write_manifest(root, 1, {"0": "g1_c0", "1": "g1_c1"})
+
+    assert s0.reload(sync_timeout_s=0.2) is False   # alone: peers not ready
+    assert s0.generation == 0                       # still serving gen 0
+    assert os.path.exists(s0._ready_marker(root, 1, 0))
+    assert 'outcome="waiting"' in s0.metrics_text()
+    # in-flight requests keep resolving throughout the staged state
+    assert s0.predict(np.zeros((1, 1, 16), np.float32), cluster=0).shape \
+        == (1, 1, 2)
+
+    assert s1.reload(sync_timeout_s=5.0) is True    # both markers exist now
+    assert s1.generation == 1
+    assert s0.generation == 0                       # s0 hasn't re-ticked yet
+    assert s0.reload(sync_timeout_s=5.0) is True    # staged gen, no rebuild
+    assert s0.generation == 1
+    assert "forecast_generation 1" in s0.metrics_text()
+    assert 'outcome="swapped"' in s0.metrics_text()
+
+
+def test_failed_reload_keeps_old_generation_and_peers_unpoisoned(sharded_pair):
+    """Satellite: a process whose restore FAILS keeps its old generation and
+    tallies outcome='error'; its peers (whose own restore succeeded) stall at
+    'waiting' — still serving the old generation — instead of swapping into
+    a fleet state the broken process can't serve. A later fixed generation
+    swaps everyone."""
+    root, (s0, s1), fc, params = sharded_pair
+    from repro.core.forecaster import save_forecaster
+
+    # gen 1: cluster 0's checkpoint dir is missing -> s0's restore fails
+    save_forecaster(os.path.join(root, "g1_c1"), fc, params, step=1)
+    _write_manifest(root, 1, {"0": "missing_dir", "1": "g1_c1"})
+    with pytest.raises(Exception):
+        s0.reload(sync_timeout_s=0.2)
+    assert s0.generation == 0
+    assert 'forecast_reloads_total{outcome="error"} 1' in s0.metrics_text()
+    # s0 never announced, so s1 waits and keeps serving its old engines
+    assert s1.reload(sync_timeout_s=0.2) is False
+    assert s1.generation == 0
+    assert s1.predict(np.zeros((1, 1, 16), np.float32), cluster=1).shape \
+        == (1, 1, 2)
+
+    # gen 2 repairs the manifest -> the whole fleet converges
+    for c in (0, 1):
+        save_forecaster(os.path.join(root, f"g2_c{c}"), fc, params, step=1)
+    _write_manifest(root, 2, {"0": "g2_c0", "1": "g2_c1"})
+    assert s0.reload(sync_timeout_s=5.0) is False   # announces gen 2, waits
+    assert s1.reload(sync_timeout_s=5.0) is True
+    assert s0.reload(sync_timeout_s=5.0) is True
+    assert s0.generation == s1.generation == 2
+
+
+def test_swap_drops_no_inflight_requests(sharded_pair):
+    """Queued futures admitted before/while the cross-process swap resolves
+    drain through the generation they were admitted under — zero drops."""
+    root, (s0, s1), fc, params = sharded_pair
+    from repro.core.forecaster import save_forecaster
+
+    for c in (0, 1):
+        save_forecaster(os.path.join(root, f"g1_c{c}"), fc, params, step=1)
+    _write_manifest(root, 1, {"0": "g1_c0", "1": "g1_c1"})
+    s0.start()
+    x = np.zeros((1, 16), np.float32)
+    futs = [s0.submit(x, cluster=0) for _ in range(32)]
+    assert s1.reload(sync_timeout_s=0.2) is False   # s1 announces first
+    assert s0.reload(sync_timeout_s=5.0) is True    # s0 completes the pair
+    futs += [s0.submit(x, cluster=0) for _ in range(32)]
+    ys = [f.result(timeout=60) for f in futs]
+    assert all(y.shape == (1, 2) for y in ys)
+    assert s0.generation == 1
+
+
+# ---- 2-process jax.distributed clusters: the bitwise guards -----------------
+
+_COMMON = r"""
+import json, hashlib
+import numpy as np
+import jax
+from repro.launch import distributed as D
+assert D.initialize_distributed()
+from repro.core import forecast
+from repro.core.fl.engine import FLConfig, run_fl
+from repro.data.synthetic import nn5_synthetic
+from repro.data.windowing import client_series_datasets
+
+sha = lambda a: hashlib.sha256(np.asarray(a).tobytes()).hexdigest()
+cfg = forecast.logtst_config(look_back=16, horizon=2, d_model=8,
+                             num_heads=2, d_ff=8, patch_len=8, stride=4)
+series = nn5_synthetic(seed=0, num_clients=12, num_days=120)
+tr, va, te, _ = client_series_datasets(series, 16, 2)
+"""
+
+_HOST_CHILD = _COMMON + r"""
+fl = FLConfig(policy="psgf", num_clients=12, local_steps=2, batch_size=4,
+              streaming_windows=True, participation=8, client_chunk=2)
+h = run_fl(cfg, fl, tr, te, jax.random.PRNGKey(0), max_rounds=4, patience=99,
+           eval_every=2, driver="host")
+store = h["client_store"]
+print(json.dumps({
+    "losses": h["train_loss"], "comm": h["comm"],
+    "rmse": [[int(r), float(v)] for r, v in h["rmse"]],
+    "final_rmse": h["final_rmse"], "comm_bytes": h["final_comm_bytes"],
+    "w": sha(h["state"]["w_global"]),
+    "lo": int(store.lo), "hi": int(store.hi),
+    "w_clients": sha(store.w_clients),
+}))
+"""
+
+
+def _host_reference():
+    from repro.core import forecast
+    from repro.core.fl.engine import FLConfig, run_fl
+    from repro.data.synthetic import nn5_synthetic
+    from repro.data.windowing import client_series_datasets
+    import hashlib
+
+    cfg = forecast.logtst_config(look_back=16, horizon=2, d_model=8,
+                                 num_heads=2, d_ff=8, patch_len=8, stride=4)
+    series = nn5_synthetic(seed=0, num_clients=12, num_days=120)
+    tr, va, te, _ = client_series_datasets(series, 16, 2)
+    fl = FLConfig(policy="psgf", num_clients=12, local_steps=2, batch_size=4,
+                  streaming_windows=True, participation=8, client_chunk=2)
+    h = run_fl(cfg, fl, tr, te, jax.random.PRNGKey(0), max_rounds=4,
+               patience=99, eval_every=2, driver="host")
+    sha = lambda a: hashlib.sha256(np.asarray(a).tobytes()).hexdigest()
+    store = h["client_store"]
+    ref = json.loads(json.dumps({
+        "losses": h["train_loss"], "comm": h["comm"],
+        "rmse": [[int(r), float(v)] for r, v in h["rmse"]],
+        "final_rmse": h["final_rmse"], "comm_bytes": h["final_comm_bytes"],
+        "w": sha(h["state"]["w_global"]),
+    }))
+    return ref, np.asarray(store.w_clients)
+
+
+def test_host_driver_two_process_bitwise():
+    """THE tentpole guard: run_fl(driver='host') partitioned over a real
+    2-process jax.distributed CPU cluster is bitwise identical to the
+    single-process run — per-round losses, comm counters, RMSE curve, final
+    weights — and each process's owned client block matches the reference's
+    row slice exactly."""
+    import hashlib
+
+    ref, ref_w_clients = _host_reference()
+    reps = run_cluster_json(2, _HOST_CHILD)
+    for rep in reps:
+        for f in ("losses", "comm", "rmse", "final_rmse", "comm_bytes", "w"):
+            assert rep[f] == ref[f], f"{f} diverged on proc {rep['lo']}"
+        block = ref_w_clients[rep["lo"]:rep["hi"]]
+        assert rep["w_clients"] == hashlib.sha256(
+            np.ascontiguousarray(block).tobytes()).hexdigest()
+    assert [(r["lo"], r["hi"]) for r in reps] == [(0, 6), (6, 12)]
+
+
+_MESH_CHILD = _COMMON + r"""
+from repro.launch.mesh import make_client_mesh
+mesh = make_client_mesh(multi_host=True)
+fl = FLConfig(policy="psgf", num_clients=12, local_steps=1, batch_size=4,
+              streaming_windows=True, participation=4)
+out = {}
+for drv in ("while", "scan"):
+    h = run_fl(cfg, fl, tr, te, jax.random.PRNGKey(0), max_rounds=4,
+               patience=99, eval_every=2, driver=drv, client_mesh=mesh)
+    out[drv] = {"losses": h["train_loss"], "final_rmse": h["final_rmse"],
+                "comm": h["comm"],
+                "w": sha(D.fetch(h["state"]["w_global"])),
+                "wc": sha(D.fetch(h["state"]["w_clients"])),
+                "sharded": len(h["state"]["w_clients"].sharding.device_set) == 2}
+print(json.dumps(out))
+"""
+
+
+def test_device_mesh_two_process_bitwise():
+    """run_fl(driver='while'|'scan') with a multi-host client mesh: the
+    donated carry stays client-sharded across processes and every metric and
+    final weight is bitwise identical to the single-process run."""
+    import hashlib
+
+    from repro.core import forecast
+    from repro.core.fl.engine import FLConfig, run_fl
+    from repro.data.synthetic import nn5_synthetic
+    from repro.data.windowing import client_series_datasets
+
+    sha = lambda a: hashlib.sha256(np.asarray(a).tobytes()).hexdigest()
+    cfg = forecast.logtst_config(look_back=16, horizon=2, d_model=8,
+                                 num_heads=2, d_ff=8, patch_len=8, stride=4)
+    series = nn5_synthetic(seed=0, num_clients=12, num_days=120)
+    tr, va, te, _ = client_series_datasets(series, 16, 2)
+    fl = FLConfig(policy="psgf", num_clients=12, local_steps=1, batch_size=4,
+                  streaming_windows=True, participation=4)
+    ref = {}
+    for drv in ("while", "scan"):
+        h = run_fl(cfg, fl, tr, te, jax.random.PRNGKey(0), max_rounds=4,
+                   patience=99, eval_every=2, driver=drv)
+        ref[drv] = json.loads(json.dumps(
+            {"losses": h["train_loss"], "final_rmse": h["final_rmse"],
+             "comm": h["comm"], "w": sha(h["state"]["w_global"]),
+             "wc": sha(h["state"]["w_clients"])}))
+    reps = run_cluster_json(2, _MESH_CHILD)
+    assert reps[0] == reps[1], "processes disagree"
+    for drv in ("while", "scan"):
+        got = reps[0][drv]
+        assert got.pop("sharded"), f"{drv}: carry lost the client sharding"
+        assert got == ref[drv], f"{drv} driver diverged from single-process"
+
+
+_EXCHANGE_CHILD = r"""
+import json
+import numpy as np
+from repro.launch import distributed as D
+assert D.initialize_distributed()
+idx, cnt = D.process_index(), D.process_count()
+rng = np.random.default_rng(7)
+full = rng.standard_normal((8, 3)).astype(np.float32)
+full[0, 0] = -0.0   # the case float summation would normalize away
+lo, hi = D.block_range(8, idx, cnt)
+mine = np.zeros_like(full); mine[lo:hi] = full[lo:hi]
+merged = D.merge_disjoint(mine)
+ints = np.arange(12, dtype=np.int32).reshape(4, 3) * (idx + 1)
+gathered = D.allgather_blocks(full[lo:hi], 8)
+rep = {
+    "merge_exact": bool((merged.view(np.int32) == full.view(np.int32)).all()),
+    "gather_exact": bool((gathered.view(np.int32) == full.view(np.int32)).all()),
+    "int_merge": D.merge_disjoint(np.where(np.arange(4)[:, None] // 2 == idx,
+                                           ints, 0).astype(np.int32)).tolist(),
+}
+print(json.dumps(rep))
+"""
+
+
+def test_exchange_primitives_two_process():
+    """merge_disjoint / allgather_blocks are pure bit transport across the
+    cluster — float payloads survive bit-exactly (including -0.0) and int32
+    payloads pass through unchanged."""
+    reps = run_cluster_json(2, _EXCHANGE_CHILD)
+    for rep in reps:
+        assert rep["merge_exact"], "merge_disjoint mangled float bits"
+        assert rep["gather_exact"], "allgather_blocks mangled float bits"
+    assert reps[0]["int_merge"] == reps[1]["int_merge"]
+
+
+def test_merge_disjoint_rejects_other_dtypes():
+    with pytest.raises(TypeError, match="float32/int32"):
+        D.merge_disjoint(np.zeros((2, 2), np.float64))

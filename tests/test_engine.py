@@ -13,15 +13,11 @@ Covers the refactor's contracts:
   * communication counters share one accounting dtype;
   * ``exact_k_mask`` breaks ties deterministically.
 """
-import json
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from distributed_utils import run_child_json
 
 from repro.core import forecast as F
 from repro.core.fl import engine as E
@@ -295,13 +291,7 @@ def test_while_driver_client_sharded_carry():
     run_fl(driver="while", shard_clients=True) pins them via in_shardings on
     the donated carry, and the final state comes back client-sharded with the
     same result as the unsharded run."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") + (
-        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    r = subprocess.run([sys.executable, "-c", _WHILE_SHARDED_CHILD], env=env,
-                       capture_output=True, text=True, timeout=600)
-    assert r.returncode == 0, r.stderr[-2000:]
-    out = json.loads(r.stdout.strip().splitlines()[-1])
+    out = run_child_json(_WHILE_SHARDED_CHILD)
     assert out["num_devices"] == 2
     assert "clients" in out["w_clients_spec"]
     assert "clients" not in out["w_global_spec"]
@@ -514,13 +504,7 @@ def test_psgf_sync_static_unshared_leaves_have_no_collectives():
     """The static-schedule sync's whole point: a leaf that is neither shared
     nor forwarded must produce NO cross-pod collective in the lowered HLO
     (2 virtual CPU devices, pod-sharded inputs). A shared leaf must."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") + (
-        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    r = subprocess.run([sys.executable, "-c", _HLO_CHILD], env=env,
-                       capture_output=True, text=True, timeout=300)
-    assert r.returncode == 0, r.stderr[-2000:]
-    out = json.loads(r.stdout.strip().splitlines()[-1])
+    out = run_child_json(_HLO_CHILD, timeout=300)
     assert out["unshared"] == [], f"collectives for unshared leaves: {out}"
     assert out["shared_a"], "shared leaf produced no collective at all"
 

@@ -15,13 +15,12 @@
 """
 import json
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from distributed_utils import run_child_json
 
 from repro.checkpoint import quantize_tree
 from repro.core.forecaster import get_forecaster, load_forecaster, save_forecaster
@@ -402,13 +401,7 @@ def test_shard_batch_two_virtual_devices():
     2 virtual devices (donated output buffer comes back sharded) and leaves
     results bit-identical; non-divisible buckets stay on the replicated
     path."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") + (
-        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    r = subprocess.run([sys.executable, "-c", _SHARD_CHILD], env=env,
-                       capture_output=True, text=True, timeout=600)
-    assert r.returncode == 0, r.stderr[-2000:]
-    out = json.loads(r.stdout.strip().splitlines()[-1])
+    out = run_child_json(_SHARD_CHILD)
     assert out["num_devices"] == 2
     assert out["out_devices"] == 2, "bucket output buffer is not batch-sharded"
     assert out["match"], "sharded predict diverged from single-device predict"
